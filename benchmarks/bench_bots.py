@@ -1,0 +1,38 @@
+"""Paper Table 1 analog: BOTS workloads vs parallelism degree.
+
+Paper: Strassen/SparseLU/Health peak at SMT2, NQueens at SMT4, Floorplan
+at SMT1.  Here: CPU-measured walltime at oversubscription ratios 1/4/8/16
+(same ratios as the paper's 1x/32/64/128 threads on 32 cores), plus each
+workload's counter profile (AI) — the decision-tree training corpus.
+"""
+from __future__ import annotations
+
+from repro.bots import suite
+
+
+def run() -> list[str]:
+    rows = suite.sweep(repeats=3, verbose=False)
+    out = []
+    for r in rows:
+        if "error" in r:
+            out.append(f"bots_{r['workload']}_d{r['degree']},NaN,error={r['error'][:40]}")
+            continue
+        c = r["counters"]
+        ai = c.flops / max(c.bytes, 1)
+        out.append(f"bots_{r['workload']}_d{r['degree']},"
+                   f"{r['wall_s']*1e6:.1f},ai={ai:.2f}")
+    # best degree per workload (the Table-1 takeaway)
+    for w in suite.WORKLOADS:
+        wr = [r for r in rows if r["workload"] == w and "wall_s" in r]
+        if wr:
+            best = min(wr, key=lambda r: r["wall_s"])
+            out.append(f"bots_{w}_best_degree,{best['wall_s']*1e6:.1f},"
+                       f"degree={best['degree']}")
+    # decision tree trained on the corpus (paper §4.2 mechanism)
+    tree = suite.train_tree(rows)
+    if tree is not None:
+        from repro.bots.suite import training_corpus
+        X, y = training_corpus(rows)
+        out.append(f"bots_dtree_train_acc,{tree.score(X, y)*100:.0f},"
+                   f"classes={len(set(y))}")
+    return out

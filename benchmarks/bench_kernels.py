@@ -1,0 +1,56 @@
+"""Kernel-level benchmark: block-shape tuning curve for the Pallas kernels.
+
+On this CPU container the kernels run in interpret mode (not representative
+of TPU walltime), so the measured numbers here are the jnp reference
+walltimes (CPU), while the kernel tuning curve is reported via the VMEM/
+alignment occupancy model (core/smt.py) — the same model the tuner uses for
+napkin math.  On a real TPU this file times the compiled kernels directly.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import smt
+from repro.kernels import ref
+
+
+def _time(fn, *args, repeats=3):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run() -> list[str]:
+    out = []
+    key = jax.random.PRNGKey(0)
+
+    # reference walltimes (CPU) for context
+    x = jax.random.normal(key, (512, 512))
+    y = jax.random.normal(key, (512, 512))
+    t = _time(jax.jit(ref.matmul), x, y)
+    out.append(f"kernel_ref_matmul_512,{t*1e6:.0f},")
+
+    q = jax.random.normal(key, (2, 256, 4, 64))
+    t = _time(jax.jit(lambda a: ref.flash_attention(a, a, a)), q)
+    out.append(f"kernel_ref_attention_256,{t*1e6:.0f},")
+
+    # block tuning curve: legal SMT-analog modes + VMEM footprint per block
+    for base in [(256, 128), (512, 128), (1024, 128)]:
+        for choice in smt.legal_modes(base):
+            vmem_mb = choice.vmem_bytes() / 2**20
+            out.append(
+                f"kernel_block_{base[0]}x{base[1]}_smt{choice.oversubscribe},"
+                f"{vmem_mb*1000:.0f},block={choice.block_shape}")
+    # stall-hiding model: oversubscription helps memory-bound blocks
+    for k in (1, 2, 4):
+        s = smt.stall_hiding_model(compute_s=1.0, memory_s=3.0, oversubscribe=k)
+        out.append(f"kernel_stallmodel_membound_smt{k},{s*1e6:.0f},")
+    return out

@@ -1,0 +1,66 @@
+"""Paper Figs 1-4 analog: application throughput vs oversubscription mode.
+
+The paper runs GADGET2/WRF/GROMACS/CPMD/GPAW at SMT1/2/4.  Here the
+applications are model-zoo training steps (reduced configs, CPU-measured)
+and the oversubscription knob is the microbatch factor (1/2/4 program
+instances per chip per step — DESIGN.md §2 maps this to SMT).  Different
+archs peak at different modes, reproducing the paper's headline observation.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from repro.configs.registry import get_config
+from repro.data.pipeline import DataConfig, batch_at
+from repro.models.model import build
+from repro.optim import adamw
+from repro.train import trainer
+
+ARCHS = ("stablelm-1.6b", "granite-moe-1b-a400m", "rwkv6-3b", "zamba2-2.7b",
+         "qwen3-8b")
+MODES = (1, 2, 4)   # SMT1 / SMT2 / SMT4 analog
+BATCH, SEQ, REPEATS = 8, 64, 3
+
+
+def _time_step(arch: str, microbatch: int) -> float:
+    cfg = get_config(arch).reduced()
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    opt = adamw.init_state(params)
+    step = jax.jit(trainer.make_train_step(model, unroll=False,
+                                           microbatch=microbatch))
+    data = DataConfig(vocab_size=cfg.vocab_size, seq_len=SEQ,
+                      global_batch=BATCH, seed=0)
+    batch = batch_at(data, 0)
+    import jax.numpy as jnp
+    if cfg.family == "encdec":
+        batch = dict(batch, frames=jnp.zeros((BATCH, cfg.enc_len, cfg.d_model),
+                                             jnp.bfloat16))
+    params, opt, m = step(params, opt, batch)            # compile
+    jax.block_until_ready(m["loss"])
+    best = float("inf")
+    for _ in range(REPEATS):
+        t0 = time.perf_counter()
+        params, opt, m = step(params, opt, batch)
+        jax.block_until_ready(m["loss"])
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run() -> list[str]:
+    out = []
+    for arch in ARCHS:
+        times = {}
+        for mode in MODES:
+            try:
+                times[mode] = _time_step(arch, mode)
+                out.append(f"smt_{arch}_x{mode},{times[mode]*1e6:.0f},"
+                           f"tok_per_s={BATCH*SEQ/times[mode]:.0f}")
+            except Exception as e:
+                out.append(f"smt_{arch}_x{mode},NaN,error={str(e)[:40]}")
+        if times:
+            best = min(times, key=times.get)
+            out.append(f"smt_{arch}_best_mode,{times[best]*1e6:.0f},mode=x{best}")
+    return out

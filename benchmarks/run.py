@@ -1,0 +1,39 @@
+"""Benchmark harness: one module per paper table/figure.
+
+  bench_bots        -> Table 1 (BOTS vs SMT mode)
+  bench_smt_models  -> Figs 1-4 (applications vs SMT mode)
+  bench_autotune    -> §4.2 (per-region tuning vs single global knob)
+  bench_kernels     -> kernel block tuning curve (VMEM occupancy model)
+
+Prints ``name,us_per_call,derived`` CSV rows.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    import benchmarks.bench_autotune as b_autotune
+    import benchmarks.bench_bots as b_bots
+    import benchmarks.bench_kernels as b_kernels
+    import benchmarks.bench_smt_models as b_smt
+
+    mods = {"bots": b_bots, "smt_models": b_smt, "autotune": b_autotune,
+            "kernels": b_kernels}
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    print("name,us_per_call,derived")
+    for name, mod in mods.items():
+        if only and only != name:
+            continue
+        t0 = time.time()
+        try:
+            for row in mod.run():
+                print(row, flush=True)
+        except Exception as e:  # keep the harness robust
+            print(f"{name}_FAILED,NaN,{type(e).__name__}: {str(e)[:80]}")
+        print(f"# {name} finished in {time.time()-t0:.1f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Quickstart: the paper's loop in 60 lines.
+
+Builds a small model, lets the region system instrument it automatically,
+collects per-region counters from the compiled step, and asks the tuner for
+a per-region plan — then prints what it found.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import get_config
+from repro.core import counters
+from repro.core.regions import collect_regions
+from repro.models.model import build
+
+# 1. build a model from the assigned-architecture registry (reduced scale)
+cfg = get_config("qwen3-8b").reduced()
+model = build(cfg)
+params = model.init(jax.random.PRNGKey(0))
+batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 64), 0,
+                                      cfg.vocab_size, dtype=jnp.int32)}
+
+# 2. instrumentation is automatic: every module enters a named region
+with collect_regions() as regions:
+    jax.eval_shape(lambda p, b: model.forward(p, b), params, batch)
+print(f"instrumented {len(regions)} regions, e.g. "
+      f"{sorted(regions)[:4]} ...")
+
+# 3. profile: per-region counters from the compiled artifact (libhpm analog)
+fwd = lambda p, b: model.forward(p, b)[0].astype(jnp.float32).mean()
+compiled = jax.jit(fwd).lower(params, batch).compile()
+rc = counters.collect(compiled)
+print("\nper-region counters (top by flops):")
+for name, flops in rc.top_regions("flops", 5):
+    c = rc.regions[name]
+    print(f"  {name:24s} flops={flops:.3e} bytes={c.bytes:.3e} "
+          f"AI={flops/max(c.bytes,1):.1f}")
+
+# 4. decide: the same counters feed the decision tree / tuner
+from repro.core.dtree import features
+print("\ncounter feature vector for the hottest region:")
+print(" ", dict(zip(("log_flops", "log_bytes", "log_coll", "log_link",
+                     "AI", "coll_frac", "ops"),
+                    [round(float(v), 2) for v in
+                     features(rc.regions[rc.top_regions('flops', 1)[0][0]])])))
+print("\n(for the full search loop see examples/autotune_regions.py)")

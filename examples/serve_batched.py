@@ -1,0 +1,33 @@
+"""Batched serving example: prefill + KV-cache decode on three model
+families (dense GQA, sliding-window, attention-free RNN) through one Engine
+API — the serving-side counterpart of the per-region config story (each
+family gets a different cache layout automatically).
+
+  PYTHONPATH=src python examples/serve_batched.py
+"""
+import sys
+
+import jax
+import jax.numpy as jnp
+
+sys.path.insert(0, "src")
+
+from repro.configs.registry import get_config  # noqa: E402
+from repro.models.model import build  # noqa: E402
+from repro.serve.engine import Engine, ServeConfig  # noqa: E402
+
+for arch in ("qwen3-8b", "h2o-danube-1.8b", "rwkv6-3b"):
+    cfg = get_config(arch).reduced()
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    engine = Engine(model, params,
+                    serve_cfg=ServeConfig(max_len=96, temperature=0.8,
+                                          seed=0))
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (4, 32), 0,
+                                 cfg.vocab_size, dtype=jnp.int32)
+    out = engine.generate(prompts, 16)
+    cache_kind = ("O(1) state" if cfg.family == "ssm" else
+                  f"ring[{cfg.swa_window}]" if cfg.swa_window else "full KV")
+    print(f"{arch:18s} [{cache_kind:12s}] generated {out['tokens'].shape} "
+          f"prefill {out['prefill_s']*1e3:6.1f} ms  "
+          f"decode {out['decode_tok_per_s']:7.0f} tok/s")

@@ -1,0 +1,54 @@
+"""BOTS Floorplan analog: branch-and-bound optimization, small working set.
+
+Place rectangular cells on a grid minimizing bounding-box area, exploring a
+batched frontier of partial placements with bound pruning.  ``degree`` =
+frontier width expanded per step (thread-count analog; unlike Strassen,
+more width means more *wasted* speculative work — the paper's Floorplan is
+the workload that does NOT benefit from higher SMT modes).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+CELLS = np.array([[2, 3], [3, 2], [1, 4], [2, 2], [4, 1]], np.int32)
+GRID = 8
+
+
+def build(n_cells: int = 5, degree: int = 4, seed: int = 0):
+    cells = jnp.asarray(CELLS[:n_cells])
+    degree = max(1, degree)
+
+    def place_cost(positions):
+        """positions: (n_cells, 2) top-left corners -> (area, overlap)."""
+        x0 = positions[:, 0]
+        y0 = positions[:, 1]
+        x1 = x0 + cells[:, 0]
+        y1 = y0 + cells[:, 1]
+        area = (jnp.max(x1) - jnp.min(x0)) * (jnp.max(y1) - jnp.min(y0))
+        # pairwise overlap
+        ox = jnp.maximum(0, jnp.minimum(x1[:, None], x1[None, :])
+                         - jnp.maximum(x0[:, None], x0[None, :]))
+        oy = jnp.maximum(0, jnp.minimum(y1[:, None], y1[None, :])
+                         - jnp.maximum(y0[:, None], y0[None, :]))
+        ov = ox * oy
+        overlap = (jnp.sum(ov) - jnp.sum(jnp.diag(ov))) // 2
+        return area, overlap
+
+    def fn(keys):
+        """Randomized branch-and-bound: `degree` parallel frontier lanes."""
+        def lane(key):
+            def body(carry, k):
+                best = carry
+                pos = jax.random.randint(k, (n_cells, 2), 0, GRID - 1)
+                area, overlap = place_cost(pos)
+                score = jnp.where(overlap > 0, jnp.int32(10_000), area)
+                return jnp.minimum(best, score), ()
+            ks = jax.random.split(key, 256 // degree)  # fixed total work
+            best, _ = jax.lax.scan(body, jnp.int32(10_000), ks)
+            return best
+        return jnp.min(jax.vmap(lane)(keys))
+
+    keys = jax.random.split(jax.random.PRNGKey(seed), degree)
+    return jax.jit(fn), (keys,)

@@ -1,0 +1,52 @@
+"""BOTS Health analog: discrete-event-ish simulation, memory-bound streaming.
+
+A multi-level health system: patients arrive at villages, queue, are treated
+or referred up a hospital hierarchy — modelled as batched counter states
+updated per timestep (lax.scan over time; state streams through memory with
+little compute per byte).  ``degree`` = number of independent village batches
+updated per call.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+LEVELS = 4
+
+
+def build(villages: int = 4096, steps: int = 64, degree: int = 1, seed: int = 0):
+    degree = max(1, min(degree, villages))
+    per = villages // degree
+
+    def step(state, key):
+        queues, treated = state                       # (V, LEVELS)
+        k1, k2, k3 = jax.random.split(key, 3)
+        arrivals = jax.random.poisson(k1, 3.0, (queues.shape[0],)).astype(jnp.int32)
+        queues = queues.at[:, 0].add(arrivals)
+        capacity = jnp.array([4, 3, 2, 1], jnp.int32)
+        service = jnp.minimum(queues, capacity)
+        queues = queues - service
+        # referral: 25% of served move up a level
+        refer = jax.random.binomial(k2, service[:, :-1].astype(jnp.float32),
+                                    0.25).astype(jnp.int32)
+        queues = queues.at[:, 1:].add(refer)
+        treated = treated + service.sum(-1) - refer.sum(-1)
+        return (queues, treated), queues.sum()
+
+    def run_batch(init_q, init_t, keys):
+        (q, t), load = jax.lax.scan(step, (init_q, init_t), keys)
+        return q, t, load
+
+    def fn(keys):
+        outs = []
+        for d in range(degree):                      # `degree` parallel units
+            init_q = jnp.zeros((per, LEVELS), jnp.int32)
+            init_t = jnp.zeros((per,), jnp.int32)
+            outs.append(run_batch(init_q, init_t, keys[d]))
+        total_treated = sum(o[1].sum() for o in outs)
+        peak_load = jnp.stack([o[2].max() for o in outs]).max()
+        return total_treated, peak_load
+
+    keys = jax.random.split(jax.random.PRNGKey(seed), degree * steps)
+    keys = keys.reshape(degree, steps, 2)
+    return jax.jit(fn), (keys,)

@@ -1,0 +1,104 @@
+"""BOTS N Queens analog: search, branch-heavy, integer ops.
+
+Vectorized bitboard DFS: the frontier of partial placements is expanded
+breadth-first for the first ``prefix`` rows (giving a batch of independent
+subtrees), then each subtree is counted by a vectorized iterative DFS.
+``degree`` = frontier batch width processed per call (thread-count analog).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def _expand_frontier(n: int, prefix: int):
+    """All legal (cols, diag1, diag2) states after `prefix` rows (numpy-side)."""
+    import numpy as np
+    states = [(0, 0, 0)]
+    for _ in range(prefix):
+        nxt = []
+        for cols, d1, d2 in states:
+            free = (~(cols | d1 | d2)) & ((1 << n) - 1)
+            while free:
+                bit = free & (-free)
+                free ^= bit
+                nxt.append((cols | bit, ((d1 | bit) << 1) & ((1 << n) - 1),
+                            (d2 | bit) >> 1))
+        states = nxt
+    return np.array(states, np.int32).reshape(-1, 3)
+
+
+def _count_kernel(n: int, rows_left: int, states):
+    """Count completions for a batch of subtree roots, vectorized DFS."""
+    def count_one(state):
+        cols0, d10, d20 = state[0], state[1], state[2]
+        # iterative DFS with an explicit stack, fixed bound
+        max_depth = rows_left
+        stack_cols = jnp.zeros((max_depth + 1,), jnp.int32).at[0].set(cols0)
+        stack_d1 = jnp.zeros((max_depth + 1,), jnp.int32).at[0].set(d10)
+        stack_d2 = jnp.zeros((max_depth + 1,), jnp.int32).at[0].set(d20)
+        stack_free = jnp.zeros((max_depth + 1,), jnp.int32).at[0].set(
+            (~(cols0 | d10 | d20)) & ((1 << n) - 1))
+
+        def cond(c):
+            depth, *_ = c
+            return depth >= 0
+
+        def body(c):
+            depth, sc, s1, s2, sf, count = c
+            free = sf[depth]
+
+            def backtrack(_):
+                return depth - 1, sc, s1, s2, sf, count
+
+            def descend(_):
+                bit = free & (-free)
+                sf2 = sf.at[depth].set(free ^ bit)
+                cols = sc[depth] | bit
+                d1 = ((s1[depth] | bit) << 1) & ((1 << n) - 1)
+                d2 = (s2[depth] | bit) >> 1
+                done = depth + 1 == max_depth
+                count2 = count + jnp.where(done, 1, 0)
+                nd = jnp.where(done, depth, depth + 1)
+                sc2 = sc.at[depth + 1].set(cols)
+                s12 = s1.at[depth + 1].set(d1)
+                s22 = s2.at[depth + 1].set(d2)
+                sf3 = sf2.at[depth + 1].set(
+                    jnp.where(done, sf2[depth + 1],
+                              (~(cols | d1 | d2)) & ((1 << n) - 1)))
+                return nd, sc2, s12, s22, sf3, count2
+
+            return jax.lax.cond(free == 0, backtrack, descend, None)
+
+        init = (jnp.int32(0), stack_cols, stack_d1, stack_d2, stack_free,
+                jnp.int32(0))
+        out = jax.lax.while_loop(cond, body, init)
+        return out[5]
+
+    return jnp.sum(jax.vmap(count_one)(states))
+
+
+def build(n: int = 8, prefix: int = 2, degree: int = 1):
+    """Returns (jitted fn, args): counts n-queens solutions."""
+    import numpy as np
+    frontier = _expand_frontier(n, prefix)
+    degree = max(1, min(degree, len(frontier)))
+    chunk = (len(frontier) + degree - 1) // degree
+    pad = degree * chunk - len(frontier)
+    if pad:
+        frontier = np.concatenate(
+            [frontier, np.full((pad, 3), (1 << n) - 1, np.int32)])
+
+    batches = jnp.asarray(frontier.reshape(degree, chunk, 3))
+
+    @jax.jit
+    def fn(batches):
+        return jnp.sum(jax.vmap(
+            functools.partial(_count_kernel, n, n - prefix))(batches))
+
+    return fn, (batches,)
+
+
+KNOWN = {6: 4, 7: 40, 8: 92, 9: 352, 10: 724}

@@ -1,0 +1,84 @@
+"""BOTS-analog suite driver: run each workload at the paper's parallelism
+degrees, measure walltime + collect counters, and emit the decision-tree
+training corpus (counters -> best degree class), reproducing the paper's
+"gather counters for different types of applications" methodology.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Optional
+
+import jax
+import numpy as np
+
+from repro.core import counters as counters_mod
+from repro.core.dtree import DecisionTree, features
+
+# paper Table 1 used 1 / 32 / 64 / 128 threads on 32 cores; at CPU test
+# scale we sweep the same oversubscription RATIOS (1x, 1x cores, 2x, 4x)
+DEGREES = (1, 4, 8, 16)
+
+WORKLOADS = ("strassen", "nqueens", "sparselu", "health", "floorplan")
+
+
+def get_builder(name: str) -> Callable:
+    import importlib
+    return importlib.import_module(f"repro.bots.{name}").build
+
+
+def time_workload(name: str, degree: int, repeats: int = 3,
+                  **size_kw) -> dict:
+    fn, args = get_builder(name)(degree=degree, **size_kw)
+    out = fn(*args)
+    jax.block_until_ready(out)  # compile + warm
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    compiled = jax.jit(fn).lower(*args).compile()
+    rc = counters_mod.collect(compiled)
+    return {
+        "workload": name, "degree": degree,
+        "wall_s": float(np.median(times)),
+        "counters": rc.total,
+        "result": jax.tree.map(lambda x: np.asarray(x).tolist(), out)
+        if np.asarray(jax.tree.leaves(out)[0]).size < 10 else None,
+    }
+
+
+def sweep(workloads=WORKLOADS, degrees=DEGREES, repeats: int = 3,
+          verbose: bool = True) -> list:
+    rows = []
+    for w in workloads:
+        for d in degrees:
+            try:
+                row = time_workload(w, d, repeats)
+            except Exception as e:
+                row = {"workload": w, "degree": d, "error": str(e)}
+            rows.append(row)
+            if verbose and "wall_s" in row:
+                print(f"{w:10s} degree={d:4d}  {row['wall_s']*1e3:8.2f} ms")
+    return rows
+
+
+def training_corpus(rows: list):
+    """(features of degree-1 counters) -> best-degree class, per workload."""
+    X, y = [], []
+    for w in {r["workload"] for r in rows if "wall_s" in r}:
+        wrows = [r for r in rows if r["workload"] == w and "wall_s" in r]
+        base = next((r for r in wrows if r["degree"] == min(DEGREES)), None)
+        best = min(wrows, key=lambda r: r["wall_s"])
+        if base is None:
+            continue
+        X.append(features(base["counters"]))
+        y.append(f"degree_{best['degree']}")
+    return np.stack(X), y
+
+
+def train_tree(rows: list) -> Optional[DecisionTree]:
+    X, y = training_corpus(rows)
+    if len(y) < 2:
+        return None
+    return DecisionTree(max_depth=4).fit(X, y)

@@ -1,0 +1,89 @@
+"""Automatic region instrumentation (the PdtTagger analog).
+
+Every model-zoo module wraps its computation in :func:`region`, which
+
+  * tags the traced ops with a ``jax.named_scope`` whose name carries the
+    ``R.`` prefix — the compiled HLO keeps this in each op's ``op_name``
+    metadata, which is how :mod:`repro.core.counters` attributes per-op
+    FLOPs/bytes/collectives back to source regions (the paper's
+    source-instrumentation -> per-region counters flow, done at IR level), and
+  * records the region path in a trace-time registry so the tuner can
+    enumerate the region tree without parsing HLO.
+
+Like PdtTagger ("by default it instruments every OpenMP parallel construct"),
+instrumentation is on by default for every module; a region filter
+(:func:`set_region_filter`) plays the role of the paper's user config file.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Callable, Iterator, Optional
+
+import jax
+
+REGION_PREFIX = "R."
+
+_state = threading.local()
+
+
+def _stack() -> list[str]:
+    if not hasattr(_state, "stack"):
+        _state.stack = []
+    return _state.stack
+
+
+def _registry() -> Optional[set]:
+    return getattr(_state, "registry", None)
+
+
+def _filter() -> Optional[Callable[[str], bool]]:
+    return getattr(_state, "filter", None)
+
+
+def set_region_filter(fn: Optional[Callable[[str], bool]]) -> None:
+    """Restrict instrumentation to regions accepted by ``fn`` (cf. paper §4.2)."""
+    _state.filter = fn
+
+
+def current_region() -> str:
+    st = _stack()
+    return "/".join(st) if st else ""
+
+
+@contextlib.contextmanager
+def region(name: str) -> Iterator[str]:
+    """Enter an instrumented region; yields the full region path."""
+    st = _stack()
+    st.append(name)
+    path = "/".join(st)
+    reg = _registry()
+    if reg is not None:
+        reg.add(path)
+    flt = _filter()
+    try:
+        if flt is None or flt(path):
+            with jax.named_scope(REGION_PREFIX + name):
+                yield path
+        else:
+            yield path
+    finally:
+        st.pop()
+
+
+@contextlib.contextmanager
+def collect_regions() -> Iterator[set]:
+    """Trace-time collection of the region tree (used by the tuner)."""
+    prev = _registry()
+    _state.registry = reg = set()
+    try:
+        yield reg
+    finally:
+        _state.registry = prev
+
+
+def discover_regions(fn: Callable, *args, **kwargs) -> set:
+    """Abstractly evaluate ``fn`` and return the set of region paths it enters."""
+    with collect_regions() as reg:
+        jax.eval_shape(fn, *args, **kwargs)
+    return set(reg)

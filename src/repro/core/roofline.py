@@ -1,0 +1,55 @@
+"""Roofline terms from per-device counters (TPU v5e targets).
+
+  compute    = flops / PEAK_FLOPS
+  memory     = bytes / HBM_BW
+  collective = link_bytes / ICI_BW   (ring cost through the busiest link)
+
+All inputs are per-device (post-SPMD HLO shapes are per-partition).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.counters import Counters
+
+PEAK_FLOPS = 197e12   # bf16 / chip
+HBM_BW = 819e9        # bytes/s / chip
+ICI_BW = 50e9         # bytes/s / link
+
+
+@dataclasses.dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        """Lower-bound step time (terms fully overlapped)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def serial_s(self) -> float:
+        """Upper-bound step time (no overlap)."""
+        return self.compute_s + self.memory_s + self.collective_s
+
+    def fraction(self) -> float:
+        """Roofline fraction: ideal compute time / achievable bound."""
+        return self.compute_s / self.bound_s if self.bound_s else 0.0
+
+    def to_json(self):
+        return {"compute_s": self.compute_s, "memory_s": self.memory_s,
+                "collective_s": self.collective_s, "dominant": self.dominant,
+                "bound_s": self.bound_s, "fraction": self.fraction()}
+
+
+def from_counters(c: Counters) -> Roofline:
+    return Roofline(compute_s=c.flops / PEAK_FLOPS,
+                    memory_s=c.bytes / HBM_BW,
+                    collective_s=c.link_bytes / ICI_BW)

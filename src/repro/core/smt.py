@@ -1,0 +1,82 @@
+"""Oversubscription model — the TPU-native analog of Power7 SMT modes.
+
+Power7 SMT interleaves 1/2/4 hardware thread contexts per core to hide
+stalls.  A TPU core has no thread contexts; the structurally equivalent
+latency-hiding knobs are:
+
+* kernel grid oversubscription: launching ``oversubscribe`` x more (smaller)
+  grid programs than minimally needed, so the Pallas pipeline overlaps one
+  block's DMA wait with another block's MXU compute (double/multi-buffering
+  degree), and
+* microbatch oversubscription at the SPMD level (more, smaller program
+  instances per chip per step).
+
+Like SMT, oversubscription never raises peak FLOPs — it trades VMEM footprint
+for stall hiding, helps memory-latency-bound regions (SMT2/SMT4 winners in
+the paper: NQueens), and *hurts* regions that are already bandwidth-saturated
+(the paper's Floorplan, GPAW).  ``legal_modes`` enforces the VMEM budget the
+way SMT modes are bounded by register/issue resources.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+VMEM_BYTES = 128 * 2**20          # v5e VMEM per core
+MXU_TILE = 128                     # systolic array edge
+DEFAULT_BUFFERS = 2                # double buffering
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockChoice:
+    block_shape: tuple
+    oversubscribe: int             # 1 (SMT1), 2 (SMT2), 4 (SMT4) analog
+    buffers: int = DEFAULT_BUFFERS
+
+    def vmem_bytes(self, dtype_bytes: int = 2, operands: int = 3) -> int:
+        elems = math.prod(self.block_shape)
+        return elems * dtype_bytes * operands * self.buffers * self.oversubscribe
+
+
+def fits_vmem(choice: BlockChoice, dtype_bytes: int = 2,
+              operands: int = 3) -> bool:
+    return choice.vmem_bytes(dtype_bytes, operands) <= VMEM_BYTES
+
+
+def aligned(block_shape: Sequence[int]) -> bool:
+    """MXU alignment: the two minor dims should be multiples of (8,128)/128."""
+    if len(block_shape) < 2:
+        return block_shape[-1] % MXU_TILE == 0
+    return block_shape[-1] % MXU_TILE == 0 and block_shape[-2] % 8 == 0
+
+
+def legal_modes(base_block: tuple, dtype_bytes: int = 2,
+                operands: int = 3) -> list[BlockChoice]:
+    """Enumerate SMT-analog modes for a kernel block: oversubscribing by k
+    shrinks the leading block dim by k (more, smaller programs)."""
+    out = []
+    for k in (1, 2, 4):
+        lead = base_block[0] // k
+        if lead < 8:
+            continue
+        shape = (lead,) + tuple(base_block[1:])
+        if not aligned(shape):
+            continue
+        choice = BlockChoice(shape, k)
+        if fits_vmem(choice, dtype_bytes, operands):
+            out.append(choice)
+    return out
+
+
+def stall_hiding_model(compute_s: float, memory_s: float, oversubscribe: int,
+                       latency_fraction: float = 0.3) -> float:
+    """Analytic step-time under oversubscription (tuner napkin math).
+
+    Memory time splits into a bandwidth part (cannot be hidden — the paper's
+    GPAW/Floorplan case: higher SMT modes don't help saturated bandwidth)
+    and a latency part that k in-flight blocks divide down (the NQueens
+    case: SMT4 keeps winning)."""
+    bw_s = memory_s * (1 - latency_fraction)
+    lat_s = memory_s * latency_fraction / max(oversubscribe, 1)
+    return max(compute_s, bw_s) + lat_s

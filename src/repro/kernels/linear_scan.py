@@ -1,0 +1,146 @@
+"""Fused recurrent scan kernels (RWKV6 WKV / Mamba2 SSD).
+
+The jnp recurrence reads/writes the (N,N) or (P,N) state from HBM every
+step (arithmetic intensity ~1 — the dry-run shows these archs memory-bound
+by exactly this).  The kernel keeps the state in a VMEM scratch across the
+whole sequence: HBM traffic collapses to streaming r/k/v/w once.
+
+Grid: (B, H) — one (batch row, head) per program; time tiles of ``bt`` steps
+are staged through VMEM blocks.  heads-per-program is the grid
+oversubscription ("SMT") knob; bt trades VMEM for pipeline depth.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wkv_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, o_ref, sout_ref,
+                s_ref, *, bt: int, nt: int):
+    tb = pl.program_id(2)
+
+    @pl.when(tb == 0)
+    def _init():
+        s_ref[...] = s0_ref[0, 0]
+
+    u = u_ref[0]                                           # (N,)
+
+    def step(t, _):
+        rt = r_ref[0, 0, t]                                # (N,)
+        kt = k_ref[0, 0, t]
+        vt = v_ref[0, 0, t]
+        wt = w_ref[0, 0, t]
+        s = s_ref[...]
+        kv = kt[:, None] * vt[None, :]                     # (N,N)
+        o_ref[0, 0, t] = jnp.dot(rt, s + u[:, None] * kv,
+                                 preferred_element_type=jnp.float32)
+        s_ref[...] = wt[:, None] * s + kv
+        return 0
+
+    jax.lax.fori_loop(0, bt, step, 0)
+
+    @pl.when(tb == nt - 1)
+    def _flush():
+        sout_ref[0, 0] = s_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("bt", "interpret"))
+def wkv_kernel(r, k, v, w, u, s0, *, bt: int = 256, interpret: bool = False):
+    """RWKV6 WKV. r,k,v,w: (B,H,T,N) f32; u: (H,N); s0: (B,H,N,N).
+
+    Returns out (B,H,T,N), final state (B,H,N,N).
+    """
+    B, H, T, N = r.shape
+    bt = min(bt, T)
+    assert T % bt == 0
+    nt = T // bt
+    kern = functools.partial(_wkv_kernel, bt=bt, nt=nt)
+    seq_spec = pl.BlockSpec((1, 1, bt, N), lambda b, h, t: (b, h, t, 0))
+    out, sout = pl.pallas_call(
+        kern,
+        grid=(B, H, nt),
+        in_specs=[
+            seq_spec, seq_spec, seq_spec, seq_spec,
+            pl.BlockSpec((1, N), lambda b, h, t: (h, 0)),
+            pl.BlockSpec((1, 1, N, N), lambda b, h, t: (b, h, 0, 0)),
+        ],
+        out_specs=[
+            seq_spec,
+            pl.BlockSpec((1, 1, N, N), lambda b, h, t: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, T, N), jnp.float32),
+            jax.ShapeDtypeStruct((B, H, N, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((N, N), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w, u, s0)
+    return out, sout
+
+
+def _ssd_kernel(x_ref, b_ref, c_ref, dt_ref, a_ref, s0_ref, o_ref, sout_ref,
+                s_ref, *, bt: int, nt: int):
+    tb = pl.program_id(2)
+
+    @pl.when(tb == 0)
+    def _init():
+        s_ref[...] = s0_ref[0, 0]
+
+    a = a_ref[0]                                           # scalar
+
+    def step(t, _):
+        xt = x_ref[0, 0, t]                                # (P,)
+        bt_v = b_ref[0, t]                                 # (N,)
+        ct = c_ref[0, t]
+        dt_t = dt_ref[0, 0, t]                             # scalar
+        s = s_ref[...]                                     # (P,N)
+        decay = jnp.exp(dt_t * a)
+        s = decay * s + (dt_t * xt)[:, None] * bt_v[None, :]
+        o_ref[0, 0, t] = jnp.dot(s, ct, preferred_element_type=jnp.float32)
+        s_ref[...] = s
+        return 0
+
+    jax.lax.fori_loop(0, bt, step, 0)
+
+    @pl.when(tb == nt - 1)
+    def _flush():
+        sout_ref[0, 0] = s_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("bt", "interpret"))
+def ssd_kernel(x, b, c, dt, a, s0, *, bt: int = 256, interpret: bool = False):
+    """Mamba2 SSD. x: (B,H,T,P) f32; b,c: (B,T,N); dt: (B,H,T); a: (H,);
+    s0: (B,H,P,N).  Returns y (B,H,T,P), final state (B,H,P,N)."""
+    B, H, T, P = x.shape
+    N = b.shape[-1]
+    bt = min(bt, T)
+    assert T % bt == 0
+    nt = T // bt
+    kern = functools.partial(_ssd_kernel, bt=bt, nt=nt)
+    out, sout = pl.pallas_call(
+        kern,
+        grid=(B, H, nt),
+        in_specs=[
+            pl.BlockSpec((1, 1, bt, P), lambda bb, h, t: (bb, h, t, 0)),
+            pl.BlockSpec((1, bt, N), lambda bb, h, t: (bb, t, 0)),
+            pl.BlockSpec((1, bt, N), lambda bb, h, t: (bb, t, 0)),
+            pl.BlockSpec((1, 1, bt), lambda bb, h, t: (bb, h, t)),
+            pl.BlockSpec((1,), lambda bb, h, t: (h,)),
+            pl.BlockSpec((1, 1, P, N), lambda bb, h, t: (bb, h, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, bt, P), lambda bb, h, t: (bb, h, t, 0)),
+            pl.BlockSpec((1, 1, P, N), lambda bb, h, t: (bb, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, T, P), jnp.float32),
+            jax.ShapeDtypeStruct((B, H, P, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        interpret=interpret,
+    )(x, b, c, dt, a, s0)
+    return out, sout

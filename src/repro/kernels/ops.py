@@ -1,0 +1,48 @@
+"""Public jit'd wrappers around the Pallas kernels, with model-layout
+adapters and the interpret switch (CPU container -> interpret=True; real TPU
+-> compiled).  The tuner's kernel knobs (block sizes, time tiles) surface
+here as keyword args fed from RegionConfig.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.linear_scan import ssd_kernel, wkv_kernel
+from repro.kernels.tuned_matmul import tuned_matmul
+
+ON_TPU = any(d.platform == "tpu" for d in jax.devices())
+INTERPRET = not ON_TPU
+
+
+def matmul(x, y, *, bm=128, bn=128, bk=128):
+    return tuned_matmul(x, y, bm=bm, bn=bn, bk=bk, interpret=INTERPRET)
+
+
+def attention(q, k, v, *, causal=True, window=0, block_q=128, block_k=128):
+    """q,k,v: (B,S,H,D) model layout -> (B,S,H,D)."""
+    B, S, H, D = q.shape
+    fold = lambda t: t.transpose(0, 2, 1, 3).reshape(B * H, t.shape[1], D)
+    out = _flash(fold(q), fold(k), fold(v), causal=causal, window=window,
+                 bq=block_q, bk=block_k, interpret=INTERPRET)
+    return out.reshape(B, H, S, D).transpose(0, 2, 1, 3)
+
+
+def wkv(r, k, v, w, u, s0, *, bt=256):
+    """Model layout (B,T,H,N) -> kernel layout (B,H,T,N) and back."""
+    tr = lambda t: jnp.moveaxis(t, 1, 2).astype(jnp.float32)
+    out, s = wkv_kernel(tr(r), tr(k), tr(v), tr(w), u.astype(jnp.float32),
+                        s0.astype(jnp.float32), bt=bt, interpret=INTERPRET)
+    return jnp.moveaxis(out, 1, 2), s
+
+
+def ssd(x, b, c, dt, a, s0, *, bt=256):
+    """Model layout x:(B,T,H,P), dt:(B,T,H) -> kernel layout and back."""
+    xk = jnp.moveaxis(x, 1, 2).astype(jnp.float32)
+    dtk = jnp.moveaxis(dt, 1, 2).astype(jnp.float32)
+    y, s = ssd_kernel(xk, b.astype(jnp.float32), c.astype(jnp.float32),
+                      dtk, a.astype(jnp.float32), s0.astype(jnp.float32),
+                      bt=bt, interpret=INTERPRET)
+    return jnp.moveaxis(y, 1, 2), s

@@ -1,0 +1,55 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets in tests)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul(x: jax.Array, y: jax.Array) -> jax.Array:
+    return jnp.dot(x.astype(jnp.float32), y.astype(jnp.float32))
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0):
+    """q,k,v: (B, S, H, D) -> (B, S, H, D); plain softmax attention."""
+    B, S, H, D = q.shape
+    s = jnp.einsum("bqhe,bkhe->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(D)
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(k.shape[1])[None, :]
+    mask = jnp.ones((S, k.shape[1]), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window:
+        mask &= qpos - kpos < window
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhe->bqhe", p, v.astype(jnp.float32))
+
+
+def wkv_linear_scan(r, k, v, w, u, s0):
+    """RWKV6 WKV oracle. r,k,v,w: (B,T,H,N); u: (H,N); s0: (B,H,N,N)."""
+    def step(s, inp):
+        rt, kt, vt, wt = inp
+        kv = kt[..., :, None] * vt[..., None, :]
+        out = jnp.einsum("bhj,bhji->bhi", rt, s + u[..., :, None] * kv)
+        s = wt[..., :, None] * s + kv
+        return s, out
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (r, k, v, w))
+    s, outs = jax.lax.scan(step, s0, xs)
+    return jnp.moveaxis(outs, 0, 1), s
+
+
+def ssd_linear_scan(x, b, c, dt, a, s0):
+    """Mamba2 SSD oracle. x: (B,T,H,P); b,c: (B,T,N); dt: (B,T,H); a: (H,)."""
+    def step(s, inp):
+        x_t, b_t, c_t, dt_t = inp
+        decay = jnp.exp(dt_t * a)
+        upd = (dt_t[..., None] * x_t)[..., :, None] * b_t[:, None, None, :]
+        s = decay[..., None, None] * s + upd
+        y = jnp.einsum("bhpn,bn->bhp", s, c_t)
+        return s, y
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (x, b, c, dt))
+    s, ys = jax.lax.scan(step, s0, xs)
+    return jnp.moveaxis(ys, 0, 1), s

@@ -1,0 +1,56 @@
+"""Block-tunable tiled matmul — the kernel-level autotuning target.
+
+Grid (M/bm, N/bn, K/bk); an f32 VMEM accumulator carries partial sums across
+the K dimension.  (bm, bn, bk) and the oversubscription mode (smt.py shrinks
+bm for more in-flight programs) are the tuner's kernel knobs: the direct
+analog of a parallel region's thread count.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref, acc_ref, *, nk: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(x_ref[...], y_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == nk - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def tuned_matmul(x: jax.Array, y: jax.Array, *, bm: int = 128, bn: int = 128,
+                 bk: int = 128, interpret: bool = False) -> jax.Array:
+    """x: (M, K) @ y: (K, N) -> (M, N) with explicit VMEM tiling."""
+    M, K = x.shape
+    K2, N = y.shape
+    assert K == K2, (x.shape, y.shape)
+    bm, bn, bk = min(bm, M), min(bn, N), min(bk, K)
+    assert M % bm == 0 and N % bn == 0 and K % bk == 0, (M, N, K, bm, bn, bk)
+    nk = K // bk
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, nk=nk),
+        grid=(M // bm, N // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
+        scratch_shapes=[_f32_scratch(bm, bn)],
+        interpret=interpret,
+    )(x, y)
+
+
+def _f32_scratch(bm, bn):
+    from jax.experimental.pallas import tpu as pltpu
+    return pltpu.VMEM((bm, bn), jnp.float32)

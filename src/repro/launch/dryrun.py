@@ -1,0 +1,226 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x input-shape x mesh) cell.
+
+For each cell this prints/records:
+  * compiled.memory_analysis()  — proves the program fits per-device HBM
+  * compiled.cost_analysis()    — XLA's FLOPs/bytes (cross-check)
+  * HLO-census counters         — per-device flops/bytes/collective bytes,
+                                  per-region attribution, collective schedule
+  * roofline terms              — compute/memory/collective seconds + dominant
+
+Results append to experiments/dryrun.jsonl (one JSON object per cell) so the
+sweep is incremental/restartable — completed cells are skipped unless
+--force.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-8b --shape train_4k --mesh both
+  python -m repro.launch.dryrun --all --mesh single
+  python -m repro.launch.dryrun --all --mesh multi --plan plans/tuned.json
+"""
+import argparse
+import json
+import time
+import traceback
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SHAPES
+from repro.configs.registry import ARCH_IDS, get_config, get_shape
+from repro.core import counters as counters_mod
+from repro.core import roofline as roofline_mod
+from repro.core.policy import RegionPlan, default_microbatch, default_plan
+from repro.distributed import sharding as shard_mod
+from repro.launch.mesh import make_production_mesh
+from repro.models import model as model_mod
+from repro.optim import adamw
+from repro.train import trainer
+
+OUT_PATH = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                        "experiments", "dryrun.jsonl")
+
+
+def build_lowered(arch_id: str, shape_id: str, mesh, plan: Optional[RegionPlan] = None,
+                  microbatch: int = 0, unroll: bool = False):
+    """Lower the step selected by the shape's kind. Returns (lowered, meta)."""
+    cfg = get_config(arch_id)
+    shape = get_shape(shape_id)
+    if not cfg.supports_shape(shape):
+        raise ValueError(f"{arch_id} skips {shape_id} (see DESIGN.md §7)")
+    model = model_mod.build(cfg)
+    if plan is None:
+        plan = default_plan(mesh, shape.kind)
+    plan.mesh = mesh
+    if not microbatch:
+        microbatch = default_microbatch(shape.kind, shape.global_batch,
+                                        mesh.shape.get("data", 1))
+    specs = model_mod.input_specs(cfg, shape)
+
+    p_sh = shard_mod.param_shardings(model, plan)
+    abstract = model.abstract_params()
+
+    if shape.kind == "train":
+        o_sh = shard_mod.opt_state_shardings(model, plan)
+        step = trainer.make_train_step(model, plan, unroll=unroll,
+                                       microbatch=microbatch,
+                                       grad_shardings=p_sh,
+                                       opt_shardings=o_sh["mu"])
+        b_sh = shard_mod.batch_shardings(plan, specs)
+        opt_abstract = adamw.abstract_state(abstract)
+        fn = jax.jit(step, in_shardings=(p_sh, o_sh, b_sh),
+                     out_shardings=(p_sh, o_sh, None),
+                     donate_argnums=(0, 1))
+        lowered = fn.lower(abstract, opt_abstract, specs)
+    elif shape.kind == "prefill":
+        def prefill_fn(params, batch):
+            return model.prefill(params, batch, plan, max_len=shape.seq_len)
+        b_sh = shard_mod.batch_shardings(plan, specs)
+        c_sh = shard_mod.cache_shardings(
+            plan, model.cache_spec(shape.global_batch, shape.seq_len))
+        fn = jax.jit(prefill_fn, in_shardings=(p_sh, b_sh),
+                     out_shardings=(None, c_sh))
+        lowered = fn.lower(abstract, specs)
+    else:  # decode
+        cache_spec = model.cache_spec(shape.global_batch, shape.seq_len)
+        c_sh = shard_mod.cache_shardings(plan, cache_spec)
+        t_sh = shard_mod.batch_shardings(plan, specs)["tokens"]
+
+        def decode_fn(params, cache, tokens):
+            return model.decode(params, cache, tokens, plan)
+        fn = jax.jit(decode_fn, in_shardings=(p_sh, c_sh, t_sh),
+                     out_shardings=(None, c_sh), donate_argnums=(1,))
+        lowered = fn.lower(abstract, cache_spec, specs["tokens"])
+    return lowered, {"cfg": cfg, "shape": shape}
+
+
+def run_cell(arch_id: str, shape_id: str, multi_pod: bool,
+             plan_path: Optional[str] = None, microbatch: int = 0,
+             verbose: bool = True, unroll: bool = False) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = 512 if multi_pod else 256
+    plan = None
+    if plan_path:
+        with open(plan_path) as f:
+            plan = RegionPlan.from_json(f.read(), mesh=mesh)
+    t0 = time.time()
+    lowered, meta = build_lowered(arch_id, shape_id, mesh, plan, microbatch,
+                                  unroll=unroll)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    ma = compiled.memory_analysis()
+    mem = {k: int(getattr(ma, k, 0)) for k in (
+        "argument_size_in_bytes", "output_size_in_bytes",
+        "temp_size_in_bytes", "generated_code_size_in_bytes")}
+    mem["peak_bytes_per_device"] = (mem["argument_size_in_bytes"]
+                                    + mem["temp_size_in_bytes"])
+    rc = counters_mod.collect(compiled)
+    rl = roofline_mod.from_counters(rc.total)
+
+    cfg, shape = meta["cfg"], meta["shape"]
+    mf = model_mod.model_flops(cfg, shape)
+    hlo_flops_global = rc.total.flops * n_chips
+    row = {
+        "arch": arch_id, "shape": shape_id,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": n_chips, "kind": shape.kind,
+        "plan": plan_path or "baseline",
+        "microbatch": microbatch,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory": mem,
+        "xla_cost": {"flops": rc.xla_flops, "bytes": rc.xla_bytes},
+        "census_flops_per_dev": rc.total.flops,
+        "census_bytes_per_dev": rc.total.bytes,
+        "census_collective_bytes_per_dev": rc.total.collective_bytes,
+        "census_link_bytes_per_dev": rc.total.link_bytes,
+        "collective_census": rc.collective_census,
+        "roofline": rl.to_json(),
+        "model_flops": mf,
+        "useful_flops_ratio": (mf / hlo_flops_global) if hlo_flops_global else 0.0,
+        "top_regions_flops": rc.top_regions("flops", 6),
+        "top_regions_link_bytes": rc.top_regions("link_bytes", 6),
+        "ok": True,
+    }
+    if verbose:
+        print(f"[{arch_id} x {shape_id} x {row['mesh']}] "
+              f"compile {t_compile:.1f}s  "
+              f"peak/dev {mem['peak_bytes_per_device']/2**30:.2f} GiB  "
+              f"roofline: c={rl.compute_s*1e3:.2f}ms m={rl.memory_s*1e3:.2f}ms "
+              f"coll={rl.collective_s*1e3:.2f}ms dom={rl.dominant} "
+              f"frac={rl.fraction():.2f} useful={row['useful_flops_ratio']:.2f}")
+        print("  memory_analysis:", {k: f"{v/2**30:.2f}GiB" for k, v in mem.items()
+                                     if k != "generated_code_size_in_bytes"})
+        print("  collective schedule:", dict(rc.collective_census))
+    return row
+
+
+def _done_cells(path: str) -> set:
+    done = set()
+    if os.path.exists(path):
+        with open(path) as f:
+            for line in f:
+                try:
+                    r = json.loads(line)
+                    if r.get("ok"):
+                        done.add((r["arch"], r["shape"], r["mesh"], r.get("plan", "baseline")))
+                except json.JSONDecodeError:
+                    pass
+    return done
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="both")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--plan", default=None, help="RegionPlan json path")
+    ap.add_argument("--microbatch", type=int, default=1)
+    ap.add_argument("--out", default=os.path.abspath(OUT_PATH))
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    cells = []
+    archs = ARCH_IDS if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    for a in archs:
+        cfg = get_config(a)
+        for s in shapes:
+            if not cfg.supports_shape(get_shape(s)):
+                print(f"SKIP {a} x {s}: long-context inapplicable (full attention)")
+                continue
+            for mp in meshes:
+                cells.append((a, s, mp))
+
+    os.makedirs(os.path.dirname(args.out), exist_ok=True)
+    done = set() if args.force else _done_cells(args.out)
+    plan_tag = args.plan or "baseline"
+    failures = 0
+    for a, s, mp in cells:
+        key = (a, s, "2x16x16" if mp else "16x16", plan_tag)
+        if key in done:
+            print(f"skip (done): {key}")
+            continue
+        try:
+            row = run_cell(a, s, mp, args.plan, args.microbatch)
+        except Exception as e:
+            failures += 1
+            row = {"arch": a, "shape": s,
+                   "mesh": "2x16x16" if mp else "16x16", "plan": plan_tag,
+                   "ok": False, "error": f"{type(e).__name__}: {e}",
+                   "traceback": traceback.format_exc()[-2000:]}
+            print(f"FAIL [{a} x {s} x {row['mesh']}]: {row['error']}")
+        with open(args.out, "a") as f:
+            f.write(json.dumps(row) + "\n")
+    print(f"dry-run sweep complete; failures={failures}")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,236 @@
+"""Attention: full/causal, GQA, sliding-window, qk_norm, KV-cache decode.
+
+Design notes (see DESIGN.md §7):
+
+* GQA repeat: K/V are repeated to the full head count *contiguously* per
+  kv-head, so a kv-head-sharded tensor repeats into a q-head-sharded tensor
+  with no communication when both divide the model axis; when kv_heads < tp
+  the plan replicates K/V (they are small under GQA) and only q-heads shard.
+* q-block chunking: prefill at 32k must not materialise the full S×S score
+  matrix.  The q loop is an *unrolled* Python loop (`n_q_blocks` small), so
+  the dry-run's ``cost_analysis()`` stays honest (scan bodies are counted
+  once by XLA — DESIGN.md §8).
+* Sliding-window attention restricts each q block to a statically-sliced KV
+  range (an actual FLOP saving, not just a mask) — this is what makes
+  h2o-danube's long_500k path sub-quadratic.
+* Context parallelism (whisper: 20 heads don't divide tp=16) comes from the
+  plan mapping ``seq -> model`` in attention regions; the einsums below then
+  induce KV all-gathers instead of head sharding.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policy import RegionPlan
+from repro.core.regions import region
+from repro.models.layers import Spec, apply_rope
+
+NEG_INF = -1e30
+
+
+def attn_spec(cfg, cross: bool = False) -> Any:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    p = {
+        "wq": Spec((d, h, hd), ("embed", "heads", "head_dim")),
+        "wk": Spec((d, kv, hd), ("embed", "kv_heads", "head_dim")),
+        "wv": Spec((d, kv, hd), ("embed", "kv_heads", "head_dim")),
+        "wo": Spec((h, hd, d), ("heads", "head_dim", "embed")),
+    }
+    if cfg.qk_norm and not cross:
+        p["q_norm"] = Spec((hd,), (None,), "ones")
+        p["k_norm"] = Spec((hd,), (None,), "ones")
+    return p
+
+
+def _rms(x, scale, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    out = xf * jax.lax.rsqrt(jnp.mean(jnp.square(xf), -1, keepdims=True) + eps)
+    return (out * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def _repeat_kv(k: jax.Array, n_heads: int) -> jax.Array:
+    """(B,S,KV,HD) -> (B,S,H,HD), contiguous per kv head (sharding-friendly)."""
+    kv = k.shape[2]
+    if kv == n_heads:
+        return k
+    return jnp.repeat(k, n_heads // kv, axis=2)
+
+
+def _project_qkv(cfg, p, x, kv_x, plan, rpath, positions, kv_positions,
+                 rope: bool):
+    q = jnp.einsum("bsd,dhe->bshe", x, p["wq"])
+    k = jnp.einsum("bsd,dhe->bshe", kv_x, p["wk"])
+    v = jnp.einsum("bsd,dhe->bshe", kv_x, p["wv"])
+    if cfg.qk_norm and "q_norm" in p:
+        q = _rms(q, p["q_norm"])
+        k = _rms(k, p["k_norm"])
+    if rope:
+        q = apply_rope(cfg, q, positions)
+        k = apply_rope(cfg, k, kv_positions)
+    q = plan.constrain(q, rpath, ("batch", "seq", "heads", "head_dim"))
+    k = plan.constrain(k, rpath, ("batch", "kv_seq", "kv_heads", "head_dim"))
+    v = plan.constrain(v, rpath, ("batch", "kv_seq", "kv_heads", "head_dim"))
+    return q, k, v
+
+
+def _scores_block(cfg, q_blk, k, v, q_pos, k_pos, plan, rpath, causal):
+    """One q-block of attention. q_blk: (B,Q,H,HD); k,v: (B,K,H,HD)."""
+    hd = q_blk.shape[-1]
+    s = jnp.einsum("bqhe,bkhe->bhqk", q_blk, k) / math.sqrt(hd)
+    s = plan.constrain(s, rpath, ("batch", "heads", "seq", "kv_seq"))
+    mask = jnp.ones(s.shape[-2:], bool)
+    if causal:
+        mask &= q_pos[:, None] >= k_pos[None, :]
+    if cfg.swa_window:
+        mask &= q_pos[:, None] - k_pos[None, :] < cfg.swa_window
+    s = jnp.where(mask, s.astype(jnp.float32), NEG_INF)
+    pmax = jnp.max(s, -1, keepdims=True)
+    pexp = jnp.exp(s - jax.lax.stop_gradient(pmax))
+    probs = (pexp / jnp.sum(pexp, -1, keepdims=True)).astype(q_blk.dtype)
+    return jnp.einsum("bhqk,bkhe->bqhe", probs, v)
+
+
+def default_block_q(seq: int) -> int:
+    """Keep the per-block score matrix bounded while staying unrolled."""
+    if seq <= 8192:
+        return seq
+    return max(seq // 4, 8192)
+
+
+def apply_attention(cfg, p, x, plan: RegionPlan, *, positions=None,
+                    kv_x=None, kv_positions=None, causal=None,
+                    rope: bool = True, name: str = "attn") -> jax.Array:
+    """Full-sequence attention (train / prefill / encoder / cross)."""
+    with region(name) as rpath:
+        B, S, _ = x.shape
+        causal = cfg.causal if causal is None else causal
+        if positions is None:
+            positions = jnp.arange(S, dtype=jnp.int32)
+        if kv_x is None:
+            kv_x, kv_positions = x, positions
+        elif kv_positions is None:
+            kv_positions = jnp.arange(kv_x.shape[1], dtype=jnp.int32)
+        q, k, v = _project_qkv(cfg, p, x, kv_x, plan, rpath,
+                               positions, kv_positions, rope)
+        k = _repeat_kv(k, cfg.n_heads)
+        v = _repeat_kv(v, cfg.n_heads)
+
+        rc = plan.config_for(rpath)
+        blk = rc.block_q or default_block_q(S)
+        outs = []
+        for start in range(0, S, blk):          # unrolled (dry-run honesty)
+            q_blk = q[:, start:start + blk]
+            q_pos = positions[start:start + blk]
+            if cfg.swa_window and causal and kv_x is x:
+                # static KV slice: only the window can be attended to
+                lo = max(0, (start - cfg.swa_window + blk) // blk * blk - blk)
+                lo = min(lo, start)
+                k_use, v_use = k[:, lo:start + blk], v[:, lo:start + blk]
+                k_pos = kv_positions[lo:start + blk]
+            else:
+                k_use, v_use, k_pos = k, v, kv_positions
+            outs.append(_scores_block(cfg, q_blk, k_use, v_use,
+                                      q_pos, k_pos, plan, rpath, causal))
+        attn = outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=1)
+        out = jnp.einsum("bshe,hed->bsd", attn, p["wo"])
+        return plan.constrain(out, rpath, ("batch", "seq", "embed"))
+
+
+# ---------------------------------------------------------------------------
+# KV cache (decode)
+# ---------------------------------------------------------------------------
+
+
+def kv_cache_spec(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+    """Cache shapes for one attention instance. SWA uses a ring of window size."""
+    size = min(max_len, cfg.swa_window) if cfg.swa_window else max_len
+    kv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    return {
+        "k": jax.ShapeDtypeStruct((batch, size, kv, hd), dtype),
+        "v": jax.ShapeDtypeStruct((batch, size, kv, hd), dtype),
+    }
+
+
+def init_kv_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        kv_cache_spec(cfg, batch, max_len, dtype))
+
+
+def apply_attention_decode(cfg, p, x, cache, pos, plan: RegionPlan,
+                           name: str = "attn") -> tuple[jax.Array, Any]:
+    """One-token decode against a KV cache.
+
+    x: (B, 1, D); cache: {"k","v"}: (B, C, KV, HD); pos: scalar int32 —
+    number of tokens already in the cache (same for the whole batch).
+    """
+    with region(name) as rpath:
+        B = x.shape[0]
+        C = cache["k"].shape[1]
+        ring = bool(cfg.swa_window) and C == cfg.swa_window
+        positions = jnp.full((1,), pos, jnp.int32)
+        q = jnp.einsum("bsd,dhe->bshe", x, p["wq"])
+        k_new = jnp.einsum("bsd,dhe->bshe", x, p["wk"])
+        v_new = jnp.einsum("bsd,dhe->bshe", x, p["wv"])
+        if cfg.qk_norm and "q_norm" in p:
+            q = _rms(q, p["q_norm"])
+            k_new = _rms(k_new, p["k_norm"])
+        q = apply_rope(cfg, q, positions)
+        k_new = apply_rope(cfg, k_new, positions)
+
+        slot = jnp.mod(pos, C) if ring else pos
+        k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new, slot, axis=1)
+        v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new, slot, axis=1)
+        new_cache = {"k": k, "v": v}
+        k = plan.constrain(k, rpath, ("batch", "kv_seq", "kv_heads", "head_dim"))
+        v = plan.constrain(v, rpath, ("batch", "kv_seq", "kv_heads", "head_dim"))
+
+        # absolute position of each cache slot
+        idx = jnp.arange(C, dtype=jnp.int32)
+        if ring:
+            # slots hold positions pos-C+1..pos once full; invalid before fill
+            k_pos = pos - jnp.mod(pos - idx, C)
+        else:
+            k_pos = idx
+        valid = (k_pos <= pos) & (k_pos >= 0)
+        hd = q.shape[-1]
+        # grouped GQA einsum: no materialised KV repeat (4x cache traffic)
+        kvh, g = cfg.n_kv_heads, cfg.n_heads // cfg.n_kv_heads
+        qg = q.reshape(B, 1, kvh, g, hd)
+        s = jnp.einsum("bqhge,bkhe->bhgqk", qg, k) / math.sqrt(hd)
+        s = plan.constrain(s, rpath,
+                           ("batch", "kv_heads", None, "seq", "kv_seq"))
+        s = jnp.where(valid[None, None, None, None, :],
+                      s.astype(jnp.float32), NEG_INF)
+        probs = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+        attn = jnp.einsum("bhgqk,bkhe->bqhge", probs, v)
+        attn = attn.reshape(B, 1, cfg.n_heads, hd)
+        out = jnp.einsum("bshe,hed->bsd", attn, p["wo"])
+        return plan.constrain(out, rpath, ("batch", "seq", "embed")), new_cache
+
+
+def prefill_kv(cfg, p, x, plan: RegionPlan, max_len: int, name: str = "attn"):
+    """Compute K/V for a full prompt and write them into a fresh cache."""
+    with region(name + ".fill"):
+        B, S, _ = x.shape
+        positions = jnp.arange(S, dtype=jnp.int32)
+        k = jnp.einsum("bsd,dhe->bshe", x, p["wk"])
+        if cfg.qk_norm and "k_norm" in p:
+            k = _rms(k, p["k_norm"])
+        k = apply_rope(cfg, k, positions)
+        v = jnp.einsum("bsd,dhe->bshe", x, p["wv"])
+        C = min(max_len, cfg.swa_window) if cfg.swa_window else max_len
+        ring = bool(cfg.swa_window) and C == cfg.swa_window
+        if S >= C:
+            k_c, v_c = k[:, S - C:], v[:, S - C:]
+            if ring:
+                # ring invariant: slot j holds absolute position p, p mod C == j
+                k_c = jnp.roll(k_c, S % C, axis=1)
+                v_c = jnp.roll(v_c, S % C, axis=1)
+        else:
+            pad = [(0, 0), (0, C - S), (0, 0), (0, 0)]
+            k_c, v_c = jnp.pad(k, pad), jnp.pad(v, pad)
+        return {"k": k_c, "v": v_c}

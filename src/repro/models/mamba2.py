@@ -1,0 +1,192 @@
+"""Mamba2 (SSD) block, as used by Zamba2.
+
+State-space recurrence with scalar-per-head decay:
+  h_t = exp(dt_t * A_h) * h_{t-1} + dt_t * x_t ⊗ B_t      (h: (B,H,P,N))
+  y_t = h_t · C_t + D_h * x_t
+Sequential ``lax.scan`` over time (honest-cost accounting handles the while
+loop; the Pallas linear_scan kernel is the TPU hot path).  80 SSM heads
+(expand=2, headdim=64 on d_model=2560) divide the 16-way model axis.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policy import RegionPlan
+from repro.core.regions import region
+from repro.models import layers as L
+from repro.models.layers import Spec
+
+CONV_K = 4
+NGROUPS = 1
+
+
+def dims(cfg):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    nheads = d_inner // cfg.ssm_head_dim
+    conv_dim = d_inner + 2 * NGROUPS * cfg.ssm_state
+    return d_inner, nheads, conv_dim
+
+
+def mamba_spec(cfg) -> Any:
+    """Input projections are kept separate (x / BC / z / dt) rather than one
+    fused in_proj: mathematically equivalent, and each output dim then
+    divides the model axis cleanly (fused slicing would cut across shards).
+    """
+    d = cfg.d_model
+    d_inner, nheads, conv_dim = dims(cfg)
+    bc = 2 * NGROUPS * cfg.ssm_state
+    return {
+        "in_x": Spec((d, d_inner), ("embed", "ssm_dim")),
+        "in_bc": Spec((d, bc), ("embed", None)),
+        "in_z": Spec((d, d_inner), ("embed", "ssm_dim")),
+        "in_dt": Spec((d, nheads), ("embed", "ssm_heads")),
+        "conv_x_w": Spec((CONV_K, d_inner), (None, "ssm_dim"), "small"),
+        "conv_x_b": Spec((d_inner,), ("ssm_dim",), "zeros"),
+        "conv_bc_w": Spec((CONV_K, bc), (None, None), "small"),
+        "conv_bc_b": Spec((bc,), (None,), "zeros"),
+        "a_log": Spec((nheads,), ("ssm_heads",), "small"),
+        "dt_bias": Spec((nheads,), ("ssm_heads",), "small"),
+        "d_skip": Spec((nheads,), ("ssm_heads",), "ones"),
+        "out_norm": Spec((d_inner,), ("ssm_dim",), "ones"),
+        "out_proj": Spec((d_inner, d), ("ssm_dim", "embed")),
+    }
+
+
+def _causal_conv(x, w, b, state=None):
+    """Depthwise causal conv. x: (B,T,C); w: (K,C). state: (B,K-1,C) or None."""
+    if state is None:
+        pad = jnp.zeros((x.shape[0], CONV_K - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)                   # (B,T+K-1,C)
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(CONV_K)) + b
+    new_state = xp[:, -(CONV_K - 1):, :]
+    return jax.nn.silu(out), new_state
+
+
+def _split_state(state):
+    if state is None:
+        return None, None, None
+    return state["conv_x"], state["conv_bc"], state["s"]
+
+
+def ssd_scan(xh, bt, ct, dt, a, s0, chunk: int = 0):
+    """xh: (B,T,H,P); bt,ct: (B,T,N); dt: (B,T,H); a: (H,); s0: (B,H,P,N).
+
+    Chunk-rematerialised scan (see scan_utils) bounds backward memory.
+    """
+    from repro.models.scan_utils import DEFAULT_CHUNK, chunked_scan
+
+    def step(s, inp):
+        x_t, b_t, c_t, dt_t = inp                            # (B,H,P),(B,N),(B,N),(B,H)
+        decay = jnp.exp(dt_t * a)                            # (B,H)
+        upd = (dt_t[..., None] * x_t)[..., :, None] * b_t[:, None, None, :]
+        s = decay[..., None, None] * s + upd
+        y = jnp.einsum("bhpn,bn->bhp", s, c_t)
+        return s, y
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (xh, bt, ct, dt))
+    s, ys = chunked_scan(step, s0, xs, chunk or DEFAULT_CHUNK)
+    return jnp.moveaxis(ys, 0, 1), s
+
+
+def ssd_chunked(xh, bt, ct, dt, a, s0, chunk: int = 64):
+    """Matmul-form SSD (Mamba2's semiseparable decomposition).
+
+    Equivalent to ssd_scan, but the state is read/written once per *chunk*
+    instead of once per token: HBM state traffic drops by the chunk length,
+    while the intra-chunk term becomes causal matmuls (MXU food).  Scalar
+    per-head decay keeps every exp() argument <= 0 (no overflow), unlike
+    per-channel-decay linear attention.
+
+    xh: (B,T,H,P); bt,ct: (B,T,N); dt: (B,T,H); a: (H,); s0: (B,H,P,N).
+    """
+    B, T, H, P = xh.shape
+    N = bt.shape[-1]
+    C = min(chunk, T)
+    if T % C:
+        return ssd_scan(xh, bt, ct, dt, a, s0)
+    nc = T // C
+    rs = lambda t: t.reshape((B, nc, C) + t.shape[2:]).swapaxes(0, 1)
+    xh_c, bt_c, ct_c, dt_c = rs(xh), rs(bt), rs(ct), rs(dt)
+
+    cdt = jnp.bfloat16  # intra-chunk matmul streams (decay math stays f32)
+
+    def chunk_step(s, inp):
+        xc, bc, cc, dc = inp                     # (B,C,H,P),(B,C,N),(B,C,N),(B,C,H)
+        la = dc * a                              # (B,C,H) log-decay increments
+        L = jnp.cumsum(la, axis=1)               # (B,C,H), decreasing
+        # intra-chunk: M[t,s] = (C_t.B_s) exp(L_t - L_s) dt_s,  s <= t
+        cb = jnp.einsum("btn,bsn->bts", cc.astype(cdt), bc.astype(cdt))
+        ratio = jnp.exp(L[:, :, None, :] - L[:, None, :, :])   # (B,C,C,H)
+        mask = (jnp.arange(C)[:, None] >= jnp.arange(C)[None, :])
+        M = cb.astype(jnp.float32)[..., None] * ratio * dc[:, None, :, :]
+        M = jnp.where(mask[None, :, :, None], M, 0.0)          # (B,t,s,H)
+        y = jnp.einsum("btsh,bshp->bthp", M.astype(cdt), xc.astype(cdt))
+        y = y.astype(jnp.float32)
+        # cross-chunk: y += exp(L_t) C_t . S_0
+        y = y + jnp.exp(L)[..., None] * jnp.einsum("bhpn,btn->bthp", s, cc)
+        # state update: S = exp(L_C) S_0 + sum_s exp(L_C - L_s) dt_s x_s (x) B_s
+        w = jnp.exp(L[:, -1:, :] - L) * dc                     # (B,C,H)
+        s = (jnp.exp(L[:, -1])[:, :, None, None] * s
+             + jnp.einsum("bshp,bsn->bhpn", xc * w[..., None], bc))
+        return s, y
+
+    s, ys = jax.lax.scan(chunk_step, s0, (xh_c, bt_c, ct_c, dt_c))
+    ys = ys.swapaxes(0, 1).reshape(B, T, H, P)
+    return ys, s
+
+
+def apply_mamba(cfg, p, x, plan: RegionPlan, state=None, name: str = "ssm"):
+    """x: (B,T,D) -> (y, new_state). state: {conv: (B,K-1,C), s: (B,H,P,N)}."""
+    with region(name) as rpath:
+        B, T, D = x.shape
+        d_inner, nheads, conv_dim = dims(cfg)
+        P, N = cfg.ssm_head_dim, cfg.ssm_state
+        conv_x0, conv_bc0, s_prev = _split_state(state)
+        xi = jnp.einsum("btd,de->bte", x, p["in_x"])
+        xi = plan.constrain(xi, rpath, ("batch", "seq", "ssm_dim"))
+        bc = jnp.einsum("btd,de->bte", x, p["in_bc"])
+        z = jnp.einsum("btd,de->bte", x, p["in_z"])
+        z = plan.constrain(z, rpath, ("batch", "seq", "ssm_dim"))
+        dt_raw = jnp.einsum("btd,de->bte", x, p["in_dt"])
+        xi, conv_x_state = _causal_conv(xi, p["conv_x_w"], p["conv_x_b"], conv_x0)
+        bc, conv_bc_state = _causal_conv(bc, p["conv_bc_w"], p["conv_bc_b"], conv_bc0)
+        bt = bc[..., :N].astype(jnp.float32)
+        ct = bc[..., N:].astype(jnp.float32)
+        dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+        a = -jnp.exp(p["a_log"].astype(jnp.float32))
+        xh = xi.reshape(B, T, nheads, P).astype(jnp.float32)
+        xh = plan.constrain(xh, rpath, ("batch", "seq", "ssm_heads", None))
+        s0 = (s_prev if s_prev is not None
+              else jnp.zeros((B, nheads, P, N), jnp.float32))
+        knobs = plan.config_for(rpath)
+        if (knobs.ssm_impl or "scan") == "chunked" and T > 1:
+            y, s_new = ssd_chunked(xh, bt, ct, dt, a, s0,
+                                   knobs.chunk or 64)
+        else:
+            y, s_new = ssd_scan(xh, bt, ct, dt, a, s0, knobs.chunk)
+        y = y + p["d_skip"].astype(jnp.float32)[:, None] * xh
+        y = y.reshape(B, T, d_inner).astype(x.dtype)
+        y = y * jax.nn.silu(z)
+        yf = y.astype(jnp.float32)
+        y = (yf * jax.lax.rsqrt(jnp.mean(jnp.square(yf), -1, keepdims=True)
+                                + 1e-6) * p["out_norm"]).astype(x.dtype)
+        out = jnp.einsum("bte,ed->btd", y, p["out_proj"])
+        out = plan.constrain(out, rpath, ("batch", "seq", "embed"))
+        new_state = {"conv_x": conv_x_state, "conv_bc": conv_bc_state,
+                     "s": s_new}
+        return out, new_state
+
+
+def state_spec(cfg, batch: int, dtype=jnp.bfloat16):
+    d_inner, nheads, conv_dim = dims(cfg)
+    bc = 2 * NGROUPS * cfg.ssm_state
+    return {
+        "conv_x": jax.ShapeDtypeStruct((batch, CONV_K - 1, d_inner), dtype),
+        "conv_bc": jax.ShapeDtypeStruct((batch, CONV_K - 1, bc), dtype),
+        "s": jax.ShapeDtypeStruct(
+            (batch, nheads, cfg.ssm_head_dim, cfg.ssm_state), jnp.float32),
+    }

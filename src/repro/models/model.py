@@ -1,0 +1,166 @@
+"""Unified model API: ``build(cfg)`` returns a Model with
+
+  spec()          -> param Spec tree          (single source of truth)
+  init(key)       -> params
+  forward(params, batch, plan)               -> (logits, aux)
+  prefill(params, batch, plan, max_len)      -> (logits, cache)
+  decode(params, cache, tokens, plan)        -> (logits, cache)
+  cache_spec(batch, max_len)                 -> abstract cache tree
+
+plus :func:`input_specs` producing ShapeDtypeStruct stand-ins for every model
+input per (arch, shape) — the dry-run contract (modality frontends are stubs:
+frame/patch embeddings arrive precomputed).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.core.policy import RegionPlan, null_plan
+from repro.models import layers as L
+
+N_VISION_TOKENS = 256
+
+
+def _family_module(cfg: ArchConfig):
+    if cfg.family in ("dense", "moe", "vlm"):
+        from repro.models import transformer as m
+    elif cfg.family == "ssm":
+        from repro.models import rwkv6 as m
+    elif cfg.family == "hybrid":
+        from repro.models import zamba2 as m
+    elif cfg.family == "encdec":
+        from repro.models import whisper as m
+    else:
+        raise ValueError(f"unknown family {cfg.family}")
+    return m
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ArchConfig
+    mod: Any
+
+    def spec(self):
+        return self.mod.spec(self.cfg)
+
+    def init(self, key, dtype=jnp.bfloat16):
+        return L.init_params(self.spec(), key, dtype)
+
+    def abstract_params(self, dtype=jnp.bfloat16):
+        return L.abstract_params(self.spec(), dtype)
+
+    def logical_axes(self):
+        return L.logical_axes(self.spec())
+
+    def forward(self, params, batch, plan: Optional[RegionPlan] = None,
+                unroll: bool = True, final_logits_only: bool = False):
+        return self.mod.forward(self.cfg, params, batch, plan or null_plan(),
+                                unroll=unroll,
+                                final_logits_only=final_logits_only)
+
+    def prefill(self, params, batch, plan: Optional[RegionPlan] = None,
+                max_len: int = 0):
+        return self.mod.prefill(self.cfg, params, batch, plan or null_plan(),
+                                max_len or batch["tokens"].shape[1])
+
+    def decode(self, params, cache, tokens, plan: Optional[RegionPlan] = None):
+        return self.mod.decode_step(self.cfg, params, cache, tokens,
+                                    plan or null_plan())
+
+    def cache_spec(self, batch: int, max_len: int, dtype=jnp.bfloat16):
+        return self.mod.cache_spec(self.cfg, batch, max_len, dtype)
+
+    def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16):
+        return self.mod.init_cache(self.cfg, batch, max_len, dtype)
+
+
+def build(cfg: ArchConfig) -> Model:
+    return Model(cfg, _family_module(cfg))
+
+
+def count_params(cfg: ArchConfig) -> int:
+    return L.spec_param_count(_family_module(cfg).spec(cfg))
+
+
+def active_param_count(cfg: ArchConfig) -> int:
+    """Params touched per token (MoE: shared + top_k of routed)."""
+    total = count_params(cfg)
+    if not cfg.n_experts:
+        return total
+    from repro.models.moe import n_experts_padded
+    e = n_experts_padded(cfg)
+    per_expert = cfg.d_ff * cfg.d_model * (3 if cfg.glu else 2)
+    routed_all = cfg.n_layers * e * per_expert
+    routed_active = cfg.n_layers * cfg.top_k * per_expert
+    return total - routed_all + routed_active
+
+
+# ---------------------------------------------------------------------------
+# Dry-run input specs (ShapeDtypeStruct stand-ins, no allocation)
+# ---------------------------------------------------------------------------
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig,
+                dtype=jnp.bfloat16) -> dict:
+    """Abstract inputs for the step selected by ``shape.kind``."""
+    B, S = shape.global_batch, shape.seq_len
+    tok = jnp.int32
+    if shape.kind == "train":
+        batch = {"tokens": jax.ShapeDtypeStruct((B, S), tok),
+                 "labels": jax.ShapeDtypeStruct((B, S), tok)}
+        if cfg.family == "encdec":
+            batch["frames"] = jax.ShapeDtypeStruct((B, cfg.enc_len, cfg.d_model), dtype)
+        if cfg.frontend == "vision_patches":
+            batch["vision_embeds"] = jax.ShapeDtypeStruct(
+                (B, N_VISION_TOKENS, cfg.d_model), dtype)
+        return batch
+    if shape.kind == "prefill":
+        batch = {"tokens": jax.ShapeDtypeStruct((B, S), tok)}
+        if cfg.family == "encdec":
+            batch["frames"] = jax.ShapeDtypeStruct((B, cfg.enc_len, cfg.d_model), dtype)
+        if cfg.frontend == "vision_patches":
+            batch["vision_embeds"] = jax.ShapeDtypeStruct(
+                (B, N_VISION_TOKENS, cfg.d_model), dtype)
+        return batch
+    if shape.kind == "decode":
+        return {"tokens": jax.ShapeDtypeStruct((B, 1), tok)}
+    raise ValueError(shape.kind)
+
+
+def make_batch(cfg: ArchConfig, shape_or_specs, key) -> dict:
+    """Materialise a concrete random batch matching ``input_specs`` (tests)."""
+    specs = (shape_or_specs if isinstance(shape_or_specs, dict)
+             else input_specs(cfg, shape_or_specs))
+    out = {}
+    for name, s in specs.items():
+        key, k = jax.random.split(key)
+        if jnp.issubdtype(s.dtype, jnp.integer):
+            out[name] = jax.random.randint(k, s.shape, 0, cfg.vocab_size,
+                                           dtype=s.dtype)
+        else:
+            out[name] = jax.random.normal(k, s.shape, jnp.float32).astype(s.dtype)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Analytic FLOPs (MODEL_FLOPS for the roofline ratio)
+# ---------------------------------------------------------------------------
+
+
+def model_flops(cfg: ArchConfig, shape: ShapeConfig) -> float:
+    """6·N·D for training, 2·N_active·D forward-only (MoE uses active)."""
+    n_active = active_param_count(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    tokens = shape.global_batch  # one new token per row
+    return 2.0 * n_active * tokens

@@ -1,0 +1,194 @@
+"""Mixture-of-Experts block (qwen2-moe: 60 routed top-4 + shared; granite:
+32 routed top-8).
+
+Dispatch is capacity-based scatter/gather (Switch/GShard style) done
+*group-wise*, where a group is one sequence: groups are sharded along the
+data axis, so the scatter/gather is shard-local and never induces a
+collective.  Expert FFNs are computed as batched einsums with the per-expert
+``ff`` dim sharded on the model axis (TP-inside-expert — legal for any expert
+count, DESIGN.md §7).  Expert parallelism (experts sharded over a mesh axis,
+all-to-all dispatch) is the tuner's alternative, selected per-region via plan
+rules ``{"experts": "model"}`` — legality requires padding 60 -> 64 for
+qwen2-moe (``pad_experts_to``).
+
+Overflowed tokens (beyond capacity) are dropped from the routed path but
+always retain the shared-expert contribution, matching standard practice.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policy import RegionPlan
+from repro.core.regions import region
+from repro.models import layers as L
+from repro.models.layers import Spec
+
+
+def n_experts_padded(cfg) -> int:
+    return max(cfg.n_experts, cfg.pad_experts_to or 0)
+
+
+def moe_spec(cfg) -> Any:
+    d, f, e = cfg.d_model, cfg.d_ff, n_experts_padded(cfg)
+    p = {
+        "router": Spec((d, e), ("embed", "experts"), "small"),
+        "gate": Spec((e, d, f), ("experts", "embed", "ff")),
+        "up": Spec((e, d, f), ("experts", "embed", "ff")),
+        "down": Spec((e, f, d), ("experts", "ff", "embed")),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = L.mlp_spec(cfg, cfg.shared_d_ff)
+        p["shared_gate"] = Spec((d, 1), ("embed", None), "small")
+    return p
+
+
+def capacity(cfg, group_len: int) -> int:
+    e = n_experts_padded(cfg)
+    cap = int(cfg.top_k * group_len * cfg.capacity_factor / e) + 1
+    return min(max(cap, cfg.top_k), group_len)
+
+
+def route(cfg, p, x):
+    """x: (G, s, D) -> (weights, expert_idx) each (G, s, top_k), aux loss."""
+    e = n_experts_padded(cfg)
+    logits = jnp.einsum("gsd,de->gse", x, p["router"]).astype(jnp.float32)
+    if cfg.pad_experts_to and cfg.pad_experts_to > cfg.n_experts:
+        pad_mask = jnp.arange(e) >= cfg.n_experts
+        logits = jnp.where(pad_mask, -1e30, logits)
+    probs = jax.nn.softmax(logits, axis=-1)
+    w, idx = jax.lax.top_k(probs, cfg.top_k)
+    w = w / jnp.sum(w, -1, keepdims=True)
+    # Switch-style load-balancing aux loss
+    me = jnp.mean(probs, axis=(0, 1))                      # (E,)
+    ce = jnp.mean(jax.nn.one_hot(idx[..., 0], e), axis=(0, 1))
+    aux = jnp.sum(me * ce) * e
+    return w.astype(x.dtype), idx, aux
+
+
+DEFAULT_MOE_GROUP = 256
+
+
+def apply_moe(cfg, p, x, plan: RegionPlan, name: str = "moe",
+              group: str = "seq"):
+    """x: (B, S, D) -> (y, aux_loss).  Dispatch impl from the plan:
+
+    'einsum' (default): GShard-style one-hot dispatch/combine einsums over
+        small token groups (plan knob ``moe_group``, default 256).  Pure
+        dots -> SPMD-clean: the ff-TP partial sums flow linearly through the
+        combine einsum and reduce once at (tokens x d_model).  ~15-40% extra
+        dot flops (dispatch/combine), bought deliberately: the scatter form
+        makes the SPMD partitioner materialise u32 index tensors and
+        all-reduce capacity-shaped expert tensors (see EXPERIMENTS.md §Perf).
+    'scatter': capacity scatter/gather per sequence (shard-local dispatch,
+        no dispatch-matmul flops) — better on a single device.
+
+    group='flat' : the whole batch is one group — decode.
+    """
+    rc_knobs = plan.config_for(name)
+    impl = rc_knobs.moe_impl or "einsum"
+    if impl == "einsum":
+        return apply_moe_einsum(cfg, p, x, plan, name, group,
+                                rc_knobs.moe_group or DEFAULT_MOE_GROUP)
+    return apply_moe_scatter(cfg, p, x, plan, name, group)
+
+
+def apply_moe_einsum(cfg, p, x, plan: RegionPlan, name: str = "moe",
+                     group: str = "seq", group_len: int = DEFAULT_MOE_GROUP):
+    with region(name) as rpath:
+        B0, S0, D = x.shape
+        e = n_experts_padded(cfg)
+        g = min(group_len, B0 * S0)
+        if (B0 * S0) % g:
+            g = S0  # fall back to sequence groups
+        xg = x.reshape(-1, g, D)                           # (n, g, D)
+        w, idx, aux = route(cfg, p, xg)                    # (n, g, k)
+        cap = capacity(cfg, g)
+
+        # slot of each (token, k) within its expert via per-expert cumsum
+        onehot_e = jax.nn.one_hot(idx, e, dtype=jnp.int32)  # (n,g,k,E)
+        flat = onehot_e.reshape(xg.shape[0], g * cfg.top_k, e)
+        slot = jnp.sum((jnp.cumsum(flat, axis=1) - 1) * flat, axis=-1)
+        slot = slot.reshape(xg.shape[0], g, cfg.top_k)      # (n,g,k)
+
+        # dispatch/combine one-hots over the combined (expert, slot) index —
+        # fused iota-compares, never a scatter, no (k,E,C) blowup
+        in_cap = slot < cap
+        ec = jnp.where(in_cap, idx * cap + slot, e * cap)   # (n,g,k)
+        oh = jax.nn.one_hot(ec, e * cap, dtype=x.dtype)     # (n,g,k,E*C)
+        disp = jnp.sum(oh, axis=2).reshape(*ec.shape[:2], e, cap)
+        comb = jnp.sum(oh.astype(jnp.float32)
+                       * w.astype(jnp.float32)[..., None], axis=2)
+        comb = comb.reshape(*ec.shape[:2], e, cap).astype(x.dtype)
+
+        expert_in = jnp.einsum("ngec,ngd->necd", disp, xg)
+        expert_in = plan.constrain(expert_in, rpath,
+                                   (None, "experts", None, "embed"))
+        gg = jnp.einsum("necd,edf->necf", expert_in, p["gate"])
+        uu = jnp.einsum("necd,edf->necf", expert_in, p["up"])
+        h = jax.nn.silu(gg) * uu if cfg.glu else jax.nn.silu(uu)
+        h = plan.constrain(h, rpath, (None, "experts", None, "ff"))
+        out = jnp.einsum("necf,efd->necd", h, p["down"])
+        y = jnp.einsum("ngec,necd->ngd", comb, out)         # combine
+        y = y.reshape(B0, S0, D)
+
+        if cfg.n_shared_experts:
+            sg = jax.nn.sigmoid(
+                jnp.einsum("bsd,do->bso", x, p["shared_gate"]))
+            y = y + sg * L.apply_mlp(cfg, p["shared"], x, plan,
+                                     name="shared_mlp")
+        return plan.constrain(y, rpath, ("batch", "seq", "embed")), aux
+
+
+def apply_moe_scatter(cfg, p, x, plan: RegionPlan, name: str = "moe",
+                      group: str = "seq"):
+    with region(name) as rpath:
+        B0, S0, D = x.shape
+        if group == "flat":
+            x = x.reshape(1, B0 * S0, D)
+        B, S, D = x.shape
+        e = n_experts_padded(cfg)
+        cap = capacity(cfg, S)
+        w, idx, aux = route(cfg, p, x)                     # (B,S,k)
+
+        # position of each (token, k) within its expert, via per-expert cumsum
+        onehot = jax.nn.one_hot(idx, e, dtype=jnp.int32)   # (B,S,k,E)
+        flat = onehot.reshape(B, S * cfg.top_k, e)
+        pos_in_e = jnp.cumsum(flat, axis=1) - 1            # (B,S*k,E)
+        slot = jnp.sum(pos_in_e * flat, axis=-1).reshape(B, S, cfg.top_k)
+        keep = slot < cap
+        slot = jnp.where(keep, slot, cap)                  # overflow -> waste slot
+
+        # scatter tokens into (B, E, cap+1, D); the +1 row absorbs overflow
+        expert_in = jnp.zeros((B, e, cap + 1, D), x.dtype)
+        b_ix = jnp.arange(B)[:, None, None]
+        expert_in = expert_in.at[b_ix, idx, slot].set(x[:, :, None, :])
+        expert_in = expert_in[:, :, :cap]
+        expert_in = plan.constrain(expert_in, rpath,
+                                   ("batch", "experts", None, "embed"))
+
+        g = jnp.einsum("becd,edf->becf", expert_in, p["gate"])
+        u = jnp.einsum("becd,edf->becf", expert_in, p["up"])
+        h = jax.nn.silu(g) * u if cfg.glu else jax.nn.silu(u)
+        h = plan.constrain(h, rpath, ("batch", "experts", None, "ff"))
+        # NOTE: no sharding constraint on the pre-combine tensor — letting
+        # XLA defer the ff-TP reduction past the gather keeps the all-reduce
+        # at (tokens x d_model), not (experts x capacity x d_model)
+        out = jnp.einsum("becf,efd->becd", h, p["down"])
+
+        # gather back + combine with routing weights
+        pad = jnp.zeros((B, e, 1, D), out.dtype)
+        out_p = jnp.concatenate([out, pad], axis=2)        # slot==cap -> 0
+        y = out_p[b_ix, idx, slot]                         # (B,S,k,D)
+        y = jnp.sum(y * w[..., None], axis=2)
+        y = plan.constrain(y, rpath, ("batch", "seq", "embed"))
+
+        if cfg.n_shared_experts:
+            sg = jax.nn.sigmoid(
+                jnp.einsum("bsd,do->bso", x, p["shared_gate"]))
+            y = y + sg * L.apply_mlp(cfg, p["shared"], x, plan,
+                                     name="shared_mlp")
+        y = y.reshape(B0, S0, D)
+        return plan.constrain(y, rpath, ("batch", "seq", "embed")), aux

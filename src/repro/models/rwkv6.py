@@ -1,0 +1,271 @@
+"""RWKV6 "Finch" (arXiv:2404.05892): attention-free time-mix with
+data-dependent decay + channel-mix.
+
+The WKV recurrence is an exact sequential ``lax.scan`` over time (state
+(B,H,N,N)); the Pallas ``linear_scan`` kernel is the TPU hot path for the
+same recurrence (kernels/linear_scan.py), and the chunk length is a tuner
+knob.  Dry-run cost accounting multiplies while-loop bodies by trip count
+(core/counters.py) so scan-based archs report honest FLOPs.
+
+Decode state is O(1) in sequence length -> long_500k runs for this arch.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policy import RegionPlan
+from repro.core.regions import region
+from repro.models import layers as L
+from repro.models.layers import Spec
+
+MIX_RANK = 32
+DECAY_RANK = 64
+N_MIX = 5  # r,k,v,w,g
+
+
+def tmix_spec(cfg) -> Any:
+    d = cfg.d_model
+    h, n = cfg.n_rwkv_heads, cfg.rwkv_head_dim
+    return {
+        "mu": Spec((N_MIX, d), (None, "embed"), "small"),
+        "mix_a": Spec((d, N_MIX * MIX_RANK), ("embed", None), "small"),
+        "mix_b": Spec((N_MIX, MIX_RANK, d), (None, None, "embed"), "small"),
+        "w0": Spec((d,), ("embed",), "small"),
+        "w_a": Spec((d, DECAY_RANK), ("embed", None), "small"),
+        "w_b": Spec((DECAY_RANK, d), (None, "embed"), "small"),
+        "u": Spec((h, n), (None, None), "small"),
+        # projections shard their output dim on the model axis ("ssm_dim");
+        # the WKV scan itself runs head-replicated (40 heads don't divide 16)
+        "wr": Spec((d, d), ("embed", "ssm_dim")),
+        "wk": Spec((d, d), ("embed", "ssm_dim")),
+        "wv": Spec((d, d), ("embed", "ssm_dim")),
+        "wg": Spec((d, d), ("embed", "ssm_dim")),
+        "wo": Spec((d, d), ("ssm_dim", "embed")),
+        "ln_scale": Spec((d,), (None,), "ones"),
+        "ln_bias": Spec((d,), (None,), "zeros"),
+    }
+
+
+def cmix_spec(cfg) -> Any:
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "mu_k": Spec((d,), ("embed",), "small"),
+        "mu_r": Spec((d,), ("embed",), "small"),
+        "wk": Spec((d, f), ("embed", "ff")),
+        "wv": Spec((f, d), ("ff", "embed")),
+        "wr": Spec((d, d), ("embed", "embed")),
+    }
+
+
+def layer_spec(cfg) -> Any:
+    return {"tmix": tmix_spec(cfg), "cmix": cmix_spec(cfg),
+            "ln1": L.norm_spec(cfg), "ln2": L.norm_spec(cfg)}
+
+
+def spec(cfg) -> Any:
+    from repro.models.transformer import _stack_spec
+    return {
+        "embed": L.embed_spec(cfg),
+        "ln_in": L.norm_spec(cfg),
+        "blocks": _stack_spec(layer_spec(cfg), cfg.n_layers),
+        "final_norm": L.norm_spec(cfg),
+    }
+
+
+def _shift(x, x_prev):
+    """Token shift: x_{t-1} with x_prev filling t=0.  x: (B,T,D)."""
+    return jnp.concatenate([x_prev[:, None, :], x[:, :-1, :]], axis=1)
+
+
+def _ddlerp(p, x, xs):
+    """Data-dependent lerp of (x, shifted x) -> five mixed streams."""
+    dx = xs - x
+    base = x[:, :, None, :] + dx[:, :, None, :] * p["mu"]        # (B,T,5,D)
+    lowrank = jnp.tanh(jnp.einsum("btd,dr->btr", x + dx * p["mu"][0], p["mix_a"]))
+    lowrank = lowrank.reshape(*lowrank.shape[:2], N_MIX, MIX_RANK)
+    adj = jnp.einsum("btmr,mrd->btmd", lowrank, p["mix_b"])
+    mixed = base + dx[:, :, None, :] * adj
+    return [mixed[:, :, i, :] for i in range(N_MIX)]
+
+
+def wkv_scan(r, k, v, w, u, s0, chunk: int = 0):
+    """Exact WKV recurrence (chunk-rematerialised scan; see scan_utils).
+
+    r,k,v,w: (B,T,H,N); u: (H,N); s0: (B,H,N,N) with S[j,i] over (key j, val i).
+    Returns out (B,T,H,N), final state.
+    """
+    from repro.models.scan_utils import DEFAULT_CHUNK, chunked_scan
+
+    def step(s, inp):
+        rt, kt, vt, wt = inp                                  # (B,H,N)
+        kv = kt[..., :, None] * vt[..., None, :]              # (B,H,N,N)
+        out = jnp.einsum("bhj,bhji->bhi",
+                         rt, s + u[..., :, None] * kv)
+        s = wt[..., :, None] * s + kv
+        return s, out
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (r, k, v, w))
+    s, outs = chunked_scan(step, s0, xs, chunk or DEFAULT_CHUNK)
+    return jnp.moveaxis(outs, 0, 1), s
+
+
+def _group_norm(p, x, h, n, eps=1e-5):
+    """Per-head LayerNorm on the WKV output (RWKV's ln_x). x: (B,T,D)."""
+    B, T, D = x.shape
+    xh = x.reshape(B, T, h, n).astype(jnp.float32)
+    mu = jnp.mean(xh, -1, keepdims=True)
+    var = jnp.var(xh, -1, keepdims=True)
+    xh = (xh - mu) * jax.lax.rsqrt(var + eps)
+    out = xh.reshape(B, T, D) * p["ln_scale"] + p["ln_bias"]
+    return out.astype(x.dtype)
+
+
+def apply_tmix(cfg, p, x, plan: RegionPlan, state=None, name: str = "tmix"):
+    """x: (B,T,D). state: None (training, zeros) or dict(s, x_prev)."""
+    with region(name) as rpath:
+        B, T, D = x.shape
+        h, n = cfg.n_rwkv_heads, cfg.rwkv_head_dim
+        x_prev = state["x_prev"] if state is not None else jnp.zeros((B, D), x.dtype)
+        xs = _shift(x, x_prev)
+        xr, xk, xv, xw, xg = _ddlerp(p, x, xs)
+        proj = lambda t, w_: plan.constrain(
+            jnp.einsum("btd,de->bte", t, w_), rpath,
+            ("batch", "seq", "ssm_dim"))
+        r = proj(xr, p["wr"]).reshape(B, T, h, n)
+        k = proj(xk, p["wk"]).reshape(B, T, h, n)
+        v = proj(xv, p["wv"]).reshape(B, T, h, n)
+        g = proj(xg, p["wg"])
+        logw = p["w0"] + jnp.einsum("btd,dr->btr", jnp.tanh(
+            jnp.einsum("btd,dr->btr", xw, p["w_a"])), p["w_b"])
+        w = jnp.exp(-jnp.exp(logw.astype(jnp.float32))).astype(jnp.float32)
+        w = w.reshape(B, T, h, n)
+        # head-replicated for the scan (heads don't divide the model axis)
+        r = plan.constrain(r, rpath, ("batch", "seq", None, None))
+        k = plan.constrain(k, rpath, ("batch", "seq", None, None))
+
+        s0 = (state["s"] if state is not None
+              else jnp.zeros((B, h, n, n), jnp.float32))
+        chunk = plan.config_for(rpath).chunk
+        out, s_new = wkv_scan(r.astype(jnp.float32), k.astype(jnp.float32),
+                              v.astype(jnp.float32), w,
+                              p["u"].astype(jnp.float32), s0, chunk)
+        out = out.reshape(B, T, D).astype(x.dtype)
+        out = _group_norm(p, out, h, n) * jax.nn.silu(g)
+        y = jnp.einsum("btd,de->bte", out, p["wo"])
+        y = plan.constrain(y, rpath, ("batch", "seq", "embed"))
+        new_state = {"s": s_new, "x_prev": x[:, -1, :]}
+        return y, new_state
+
+
+def apply_cmix(cfg, p, x, plan: RegionPlan, state=None, name: str = "cmix"):
+    with region(name) as rpath:
+        B, T, D = x.shape
+        x_prev = state["x_prev"] if state is not None else jnp.zeros((B, D), x.dtype)
+        xs = _shift(x, x_prev)
+        xk = x + (xs - x) * p["mu_k"]
+        xr = x + (xs - x) * p["mu_r"]
+        kk = jnp.square(jax.nn.relu(jnp.einsum("btd,df->btf", xk, p["wk"])))
+        kk = plan.constrain(kk, rpath, ("batch", "seq", "ff"))
+        vv = jnp.einsum("btf,fd->btd", kk, p["wv"])
+        rr = jax.nn.sigmoid(jnp.einsum("btd,de->bte", xr, p["wr"]))
+        y = plan.constrain(rr * vv, rpath, ("batch", "seq", "embed"))
+        return y, {"x_prev": x[:, -1, :]}
+
+
+def _layer(cfg, lp, x, plan, li, state=None):
+    with region(f"layer{li}"):
+        st_t = state["tmix"] if state is not None else None
+        st_c = state["cmix"] if state is not None else None
+        h = L.apply_norm(cfg, lp["ln1"], x)
+        y, st_t2 = apply_tmix(cfg, lp["tmix"], h, plan, st_t)
+        x = x + y
+        h = L.apply_norm(cfg, lp["ln2"], x)
+        y, st_c2 = apply_cmix(cfg, lp["cmix"], h, plan, st_c)
+        x = x + y
+        return x, ({"tmix": st_t2, "cmix": st_c2} if state is not None
+                   else None)
+
+
+def forward(cfg, params, batch, plan: RegionPlan, *, unroll: bool = True,
+            final_logits_only: bool = False):
+    x = L.apply_embed(cfg, params["embed"], batch["tokens"], plan)
+    x = L.apply_norm(cfg, params["ln_in"], x)
+    blocks = params["blocks"]
+
+    def _maybe_remat(fn, rpath):
+        return jax.checkpoint(fn) if plan.config_for(rpath).remat else fn
+
+    if unroll:
+        for li in range(cfg.n_layers):
+            lp = jax.tree.map(lambda a: a[li], blocks)
+            x, _ = _maybe_remat(
+                lambda hh, lp=lp, li=li: _layer(cfg, lp, hh, plan, li),
+                f"layer{li}")(x)
+    else:
+        def body(hh, lp):
+            out, _ = _maybe_remat(
+                lambda h2: _layer(cfg, lp, h2, plan, 0), "layer0")(hh)
+            return out, ()
+        x, _ = jax.lax.scan(body, x, blocks)
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    if final_logits_only:
+        x = x[:, -1:]
+    return L.apply_unembed(cfg, params["embed"], x, plan), jnp.float32(0)
+
+
+# -- serving ----------------------------------------------------------------
+
+
+def cache_spec(cfg, batch: int, max_len: int, dtype=jnp.bfloat16) -> Any:
+    h, n, d = cfg.n_rwkv_heads, cfg.rwkv_head_dim, cfg.d_model
+    per_layer = {
+        "tmix": {"s": jax.ShapeDtypeStruct((batch, h, n, n), jnp.float32),
+                 "x_prev": jax.ShapeDtypeStruct((batch, d), dtype)},
+        "cmix": {"x_prev": jax.ShapeDtypeStruct((batch, d), dtype)},
+    }
+    return {
+        "layers": {f"l{i}": per_layer for i in range(cfg.n_layers)},
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16) -> Any:
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        cache_spec(cfg, batch, max_len, dtype))
+
+
+def decode_step(cfg, params, cache, tokens, plan: RegionPlan, *,
+                unroll: bool = True):
+    x = L.apply_embed(cfg, params["embed"], tokens, plan)
+    x = L.apply_norm(cfg, params["ln_in"], x)
+    blocks = params["blocks"]
+    new_states = {}
+    for li in range(cfg.n_layers):
+        lp = jax.tree.map(lambda a: a[li], blocks)
+        st = cache["layers"][f"l{li}"]
+        x, st2 = _layer(cfg, lp, x, plan, li, st)
+        new_states[f"l{li}"] = st2
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    logits = L.apply_unembed(cfg, params["embed"], x, plan)
+    return logits, {"layers": new_states, "pos": cache["pos"] + 1}
+
+
+def prefill(cfg, params, batch, plan: RegionPlan, max_len: int):
+    x = L.apply_embed(cfg, params["embed"], batch["tokens"], plan)
+    x = L.apply_norm(cfg, params["ln_in"], x)
+    B, S = batch["tokens"].shape
+    blocks = params["blocks"]
+    states = {}
+    for li in range(cfg.n_layers):
+        lp = jax.tree.map(lambda a: a[li], blocks)
+        zero = {"tmix": {"s": jnp.zeros((B, cfg.n_rwkv_heads, cfg.rwkv_head_dim,
+                                         cfg.rwkv_head_dim), jnp.float32),
+                         "x_prev": jnp.zeros((B, cfg.d_model), x.dtype)},
+                "cmix": {"x_prev": jnp.zeros((B, cfg.d_model), x.dtype)}}
+        x, st2 = _layer(cfg, lp, x, plan, li, zero)
+        states[f"l{li}"] = st2
+    x = L.apply_norm(cfg, params["final_norm"], x[:, -1:])
+    logits = L.apply_unembed(cfg, params["embed"], x, plan)
+    return logits, {"layers": states, "pos": jnp.asarray(S, jnp.int32)}

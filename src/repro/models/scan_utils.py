@@ -1,0 +1,44 @@
+"""Chunked, rematerialised time scans for recurrent blocks (RWKV/Mamba).
+
+A plain ``lax.scan`` over T steps stores every step's body residuals for the
+backward pass — at (B,H,N,N) state sizes that is hundreds of GiB for a 4k
+sequence.  ``chunked_scan`` nests two scans: an outer scan over T/C chunks
+whose body is ``jax.checkpoint``'d, so only chunk-boundary carries are saved
+and each chunk's residuals are recomputed during backward.  Peak memory:
+(T/C) boundary states + C per-step residuals for one chunk.  C (the tuner's
+``chunk`` knob) trades recompute for memory.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+DEFAULT_CHUNK = 128
+
+
+def chunked_scan(step_fn: Callable, carry, xs, chunk: int = DEFAULT_CHUNK,
+                 remat: bool = True):
+    """Equivalent to ``jax.lax.scan(step_fn, carry, xs)`` with bounded memory.
+
+    xs: pytree of (T, ...) arrays; T must be divisible by ``chunk`` (callers
+    use power-of-two T and C).  Returns (final_carry, stacked_outputs).
+    """
+    T = jax.tree.leaves(xs)[0].shape[0]
+    if chunk <= 0 or T % chunk != 0 or T <= chunk:
+        return jax.lax.scan(step_fn, carry, xs)
+    n = T // chunk
+
+    def chunk_body(c, xs_chunk):
+        return jax.lax.scan(step_fn, c, xs_chunk)
+
+    if remat:
+        chunk_body = jax.checkpoint(chunk_body)
+
+    xs_c = jax.tree.map(
+        lambda a: a.reshape((n, chunk) + a.shape[1:]), xs)
+    carry, ys = jax.lax.scan(chunk_body, carry, xs_c)
+    ys = jax.tree.map(
+        lambda a: a.reshape((a.shape[0] * a.shape[1],) + a.shape[2:]), ys)
+    return carry, ys

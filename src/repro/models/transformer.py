@@ -1,0 +1,162 @@
+"""Generic dense decoder LM (qwen3-8b/32b, stablelm, h2o-danube, internvl2
+backbone).  Parameters are stored layer-stacked (leading ``layers`` axis) so
+one pytree layout serves both the unrolled path (dry-run: honest
+cost_analysis) and the ``lax.scan`` path (fast CPU compile for training at
+small scale).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policy import RegionPlan
+from repro.core.regions import region
+from repro.models import attention as attn
+from repro.models import layers as L
+
+
+def _stack_spec(spec_tree: Any, n: int) -> Any:
+    return jax.tree.map(
+        lambda s: L.Spec((n,) + s.shape, ("layers",) + s.axes, s.init, s.scale),
+        spec_tree, is_leaf=lambda x: isinstance(x, L.Spec))
+
+
+def layer_spec(cfg) -> Any:
+    from repro.models import moe as moe_mod
+    return {
+        "attn": attn.attn_spec(cfg),
+        "mlp": moe_mod.moe_spec(cfg) if cfg.n_experts else L.mlp_spec(cfg),
+        "norm1": L.norm_spec(cfg),
+        "norm2": L.norm_spec(cfg),
+    }
+
+
+def spec(cfg) -> Any:
+    return {
+        "embed": L.embed_spec(cfg),
+        "blocks": _stack_spec(layer_spec(cfg), cfg.n_layers),
+        "final_norm": L.norm_spec(cfg),
+    }
+
+
+def _layer(cfg, lp, x, plan, li: int):
+    from repro.models import moe as moe_mod
+    with region(f"layer{li}"):
+        h = L.apply_norm(cfg, lp["norm1"], x)
+        x = x + attn.apply_attention(cfg, lp["attn"], h, plan)
+        h = L.apply_norm(cfg, lp["norm2"], x)
+        if cfg.n_experts:
+            y, aux = moe_mod.apply_moe(cfg, lp["mlp"], h, plan)
+        else:
+            y, aux = L.apply_mlp(cfg, lp["mlp"], h, plan), jnp.float32(0)
+        x = x + y
+        return plan.constrain(x, f"layer{li}", ("batch", "seq", "embed")), aux
+
+
+def _maybe_remat(fn, plan, rpath):
+    return jax.checkpoint(fn) if plan.config_for(rpath).remat else fn
+
+
+def forward(cfg, params, batch, plan: RegionPlan, *, unroll: bool = True,
+            final_logits_only: bool = False):
+    """Returns (logits, aux_loss)."""
+    tokens = batch["tokens"]
+    x = L.apply_embed(cfg, params["embed"], tokens, plan)
+    if cfg.frontend == "vision_patches" and "vision_embeds" in batch:
+        with region("vision_stub"):
+            ve = batch["vision_embeds"].astype(x.dtype)
+            x = jnp.concatenate([ve, x[:, ve.shape[1]:]], axis=1)
+    blocks = params["blocks"]
+    aux_total = jnp.float32(0)
+    if unroll:
+        for li in range(cfg.n_layers):
+            lp = jax.tree.map(lambda a: a[li], blocks)
+            x, aux = _maybe_remat(
+                lambda h: _layer(cfg, lp, h, plan, li), plan, f"layer{li}")(x)
+            aux_total = aux_total + aux
+    else:
+        def body(carry, lp):
+            h, acc = carry
+            fn = _maybe_remat(lambda hh: _layer(cfg, lp, hh, plan, 0), plan,
+                              "layer0")
+            h, aux = fn(h)
+            return (h, acc + aux), ()
+        (x, aux_total), _ = jax.lax.scan(body, (x, aux_total), blocks)
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    if final_logits_only:
+        x = x[:, -1:]
+    return L.apply_unembed(cfg, params["embed"], x, plan), aux_total
+
+
+# -- serving ----------------------------------------------------------------
+
+
+def cache_spec(cfg, batch: int, max_len: int, dtype=jnp.bfloat16) -> Any:
+    one = attn.kv_cache_spec(cfg, batch, max_len, dtype)
+    return {
+        "layers": {f"l{i}": one for i in range(cfg.n_layers)},
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16) -> Any:
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        cache_spec(cfg, batch, max_len, dtype))
+
+
+def decode_step(cfg, params, cache, tokens, plan: RegionPlan, *,
+                unroll: bool = True):
+    """tokens: (B, 1) -> (logits, new_cache)."""
+    pos = cache["pos"]
+    x = L.apply_embed(cfg, params["embed"], tokens, plan)
+    blocks = params["blocks"]
+    new_layers = {}
+    for li in range(cfg.n_layers):
+        lp = jax.tree.map(lambda a: a[li], blocks)
+        lc = cache["layers"][f"l{li}"]
+        with region(f"layer{li}"):
+            h = L.apply_norm(cfg, lp["norm1"], x)
+            a, nc = attn.apply_attention_decode(cfg, lp["attn"], h, lc, pos, plan)
+            x = x + a
+            h = L.apply_norm(cfg, lp["norm2"], x)
+            if cfg.n_experts:
+                from repro.models import moe as moe_mod
+                y, _ = moe_mod.apply_moe(cfg, lp["mlp"], h, plan, group="flat")
+            else:
+                y = L.apply_mlp(cfg, lp["mlp"], h, plan)
+            x = x + y
+        new_layers[f"l{li}"] = nc
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    logits = L.apply_unembed(cfg, params["embed"], x, plan)
+    return logits, {"layers": new_layers, "pos": pos + 1}
+
+
+def prefill(cfg, params, batch, plan: RegionPlan, max_len: int):
+    """Forward over the prompt, returning last-token logits + a filled cache."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = L.apply_embed(cfg, params["embed"], tokens, plan)
+    if cfg.frontend == "vision_patches" and "vision_embeds" in batch:
+        with region("vision_stub"):
+            ve = batch["vision_embeds"].astype(x.dtype)
+            x = jnp.concatenate([ve, x[:, ve.shape[1]:]], axis=1)
+    blocks = params["blocks"]
+    caches = {}
+    for li in range(cfg.n_layers):
+        lp = jax.tree.map(lambda a: a[li], blocks)
+        with region(f"layer{li}"):
+            h = L.apply_norm(cfg, lp["norm1"], x)
+            caches[f"l{li}"] = attn.prefill_kv(cfg, lp["attn"], h, plan, max_len)
+            x = x + attn.apply_attention(cfg, lp["attn"], h, plan)
+            h = L.apply_norm(cfg, lp["norm2"], x)
+            if cfg.n_experts:
+                from repro.models import moe as moe_mod
+                y, _ = moe_mod.apply_moe(cfg, lp["mlp"], h, plan)
+            else:
+                y = L.apply_mlp(cfg, lp["mlp"], h, plan)
+            x = x + y
+    x = L.apply_norm(cfg, params["final_norm"], x[:, -1:])
+    logits = L.apply_unembed(cfg, params["embed"], x, plan)
+    return logits, {"layers": caches, "pos": jnp.asarray(S, jnp.int32)}

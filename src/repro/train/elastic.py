@@ -1,0 +1,57 @@
+"""Elastic scaling + straggler telemetry.
+
+* ``reshard``: place a (logically unsharded) restored train state onto a new
+  mesh — the recovery path after losing a node: restart with a smaller data
+  axis, reload the last checkpoint, keep training.  Data order stays exact
+  because the pipeline is a pure function of (seed, step) (data/pipeline.py).
+* ``StepWatchdog``: per-step walltime telemetry with a robust z-score flag —
+  the SPMD-world straggler answer: you cannot drop a straggler mid-step, but
+  you can detect it, alert, and evict-and-resume (checkpoint + elastic
+  restart), which this module's pieces implement end to end.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+from repro.core.policy import RegionPlan, legal_spec
+from jax.sharding import NamedSharding
+
+
+def reshard(state: Any, axes_tree: Any, plan: RegionPlan) -> Any:
+    """device_put every leaf with its plan-legal sharding on plan.mesh."""
+    def put(x, axes):
+        if plan.mesh is None:
+            return x
+        spec = legal_spec(x.shape, axes if axes else (None,) * x.ndim,
+                          plan.rules, plan.mesh)
+        return jax.device_put(x, NamedSharding(plan.mesh, spec))
+    return jax.tree.map(put, state, axes_tree)
+
+
+class StepWatchdog:
+    """Flags steps (hosts) whose walltime deviates from the running median."""
+
+    def __init__(self, window: int = 50, threshold: float = 3.0):
+        self.window = window
+        self.threshold = threshold
+        self.times: list[float] = []
+        self._t0: Optional[float] = None
+        self.flagged: list[int] = []
+
+    def start(self):
+        self._t0 = time.perf_counter()
+
+    def stop(self, step: int) -> bool:
+        dt = time.perf_counter() - self._t0
+        self.times.append(dt)
+        hist = np.array(self.times[-self.window:])
+        med = np.median(hist)
+        mad = np.median(np.abs(hist - med)) + 1e-9
+        is_straggler = len(hist) >= 10 and (dt - med) / (1.4826 * mad) > self.threshold
+        if is_straggler:
+            self.flagged.append(step)
+        return bool(is_straggler)

@@ -1,0 +1,151 @@
+"""Train/eval step factories.
+
+``make_train_step`` builds a jit-able function (params, opt_state, batch) ->
+(params, opt_state, metrics) with:
+
+* cross-entropy in f32 (logits may be vocab-sharded; XLA handles the
+  reduction),
+* MoE aux-loss folding,
+* gradient accumulation over ``microbatch`` slices as an *unrolled* Python
+  loop (honest dry-run costs; one all-reduce worth of gradient traffic per
+  step, not per microbatch — the collective-deferral trick),
+* remat controlled per-region by the plan (models consult it),
+* AdamW from :mod:`repro.optim.adamw`.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policy import RegionPlan, null_plan
+from repro.core.regions import region
+from repro.models.model import Model
+from repro.optim import adamw
+from repro.optim.schedule import warmup_cosine
+
+AUX_WEIGHT = 0.01
+
+
+def cross_entropy(logits, labels) -> jax.Array:
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def make_loss_fn(model: Model, plan: Optional[RegionPlan], unroll: bool):
+    plan = plan or null_plan()
+
+    def loss_fn(params, batch):
+        logits, aux = model.forward(params, batch, plan, unroll=unroll)
+        labels = batch["labels"]
+        if model.cfg.frontend == "vision_patches":
+            # stubbed vision prefix replaces the first tokens; score the rest
+            from repro.models.model import N_VISION_TOKENS
+            logits = logits[:, N_VISION_TOKENS:]
+            labels = labels[:, N_VISION_TOKENS:]
+        ce = cross_entropy(logits, labels)
+        return ce + AUX_WEIGHT * aux, {"ce": ce, "aux": aux}
+
+    return loss_fn
+
+
+def _split_microbatch(batch, i, n):
+    def slc(x):
+        mb = x.shape[0] // n
+        return jax.lax.dynamic_slice_in_dim(x, i * mb, mb, axis=0)
+    return jax.tree.map(slc, batch)
+
+
+def make_train_step(model: Model, plan: Optional[RegionPlan] = None, *,
+                    opt_cfg: adamw.AdamWConfig = adamw.AdamWConfig(),
+                    unroll: bool = True, microbatch: int = 1,
+                    accum: str = "scan", schedule_total: int = 10_000,
+                    grad_shardings: Any = None, opt_shardings: Any = None):
+    loss_fn = make_loss_fn(model, plan, unroll)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def _constrain_grads(g):
+        # keep the f32 grad accumulator sharded like the params; without
+        # this the scan carry can end up replicated (GiBs per device)
+        if grad_shardings is None:
+            return g
+        return jax.tree.map(jax.lax.with_sharding_constraint, g,
+                            grad_shardings)
+
+    def train_step(params, opt_state, batch):
+        if microbatch <= 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+        elif accum == "scan":
+            # grad accumulation as a lax.scan over microbatches: one gradient
+            # buffer, one all-reduce worth of traffic per step; HLO while-loop
+            # accounting (core/counters) keeps the dry-run costs honest.
+            def reshape(x):
+                mb = x.shape[0] // microbatch
+                return x.reshape((microbatch, mb) + x.shape[1:])
+            stacked = jax.tree.map(reshape, batch)
+
+            def body(acc, mb_batch):
+                loss_a, grads_a, metrics_a = acc
+                (l2, m2), g2 = grad_fn(params, mb_batch)
+                g = _constrain_grads(jax.tree.map(jnp.add, grads_a, g2))
+                return (loss_a + l2, g,
+                        jax.tree.map(jnp.add, metrics_a, m2)), ()
+
+            zeros_like_f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+            init = (jnp.float32(0),
+                    _constrain_grads(jax.tree.map(zeros_like_f32, params)),
+                    {"ce": jnp.float32(0), "aux": jnp.float32(0)})
+            (loss, grads, metrics), _ = jax.lax.scan(body, init, stacked)
+            inv = 1.0 / microbatch
+            loss = loss * inv
+            metrics = jax.tree.map(lambda m: m * inv, metrics)
+            grads = jax.tree.map(lambda g: g * inv, grads)
+        else:
+            def one(i):
+                return grad_fn(params, _split_microbatch(batch, i, microbatch))
+            (loss, metrics), grads = one(0)
+            for i in range(1, microbatch):  # unrolled accumulation
+                (l2, m2), g2 = one(i)
+                loss = loss + l2
+                metrics = jax.tree.map(jnp.add, metrics, m2)
+                grads = jax.tree.map(jnp.add, grads, g2)
+            inv = 1.0 / microbatch
+            loss = loss * inv
+            metrics = jax.tree.map(lambda m: m * inv, metrics)
+            grads = jax.tree.map(lambda g: g * inv, grads)
+        with region("optimizer"):
+            lr_scale = warmup_cosine(opt_state["step"] + 1,
+                                     warmup=max(min(100, schedule_total // 10), 1),
+                                     total=schedule_total)
+            params_u = params
+            if opt_shardings is not None:
+                # ZeRO-1: slice params down to the (data x model)-sharded
+                # update layout (free), run the whole f32 update sharded,
+                # and regather only the final bf16 params — without this the
+                # weight-decay add forces an all-gather of the f32 update
+                params_u = jax.tree.map(jax.lax.with_sharding_constraint,
+                                        params, opt_shardings)
+            params2, opt2, om = adamw.apply_updates(
+                opt_cfg, params_u, grads, opt_state, lr_scale)
+            if grad_shardings is not None:
+                params2 = jax.tree.map(jax.lax.with_sharding_constraint,
+                                       params2, grad_shardings)
+        metrics = dict(metrics, loss=loss, **om)
+        return params2, opt2, metrics
+
+    return train_step
+
+
+def make_eval_step(model: Model, plan: Optional[RegionPlan] = None, *,
+                   unroll: bool = True):
+    loss_fn = make_loss_fn(model, plan, unroll)
+
+    def eval_step(params, batch):
+        loss, metrics = loss_fn(params, batch)
+        return dict(metrics, loss=loss)
+
+    return eval_step

@@ -1,0 +1,50 @@
+"""BOTS-analog suite: correctness at every parallelism degree (the paper's
+invariant — thread count changes performance, never results)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.bots import floorplan, health, nqueens, sparselu, strassen
+
+
+@pytest.mark.parametrize("degree", [1, 7, 49])
+def test_strassen_degree_invariant(degree):
+    fn, args = strassen.build(n=64, depth=2, degree=degree)
+    out = fn(*args)
+    want = strassen.reference(*args)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("n,prefix", [(6, 1), (7, 2), (8, 2)])
+@pytest.mark.parametrize("degree", [1, 4])
+def test_nqueens_counts(n, prefix, degree):
+    fn, args = nqueens.build(n=n, prefix=prefix, degree=degree)
+    assert int(fn(*args)) == nqueens.KNOWN[n]
+
+
+@pytest.mark.parametrize("degree", [1, 4])
+def test_sparselu_residual(degree):
+    fn, args = sparselu.build(nb=4, bs=16, band=3, degree=degree)
+    lu = fn(*args)
+    blocks, mask = sparselu.make_matrix(4, 16, 3)
+    assert sparselu.residual(blocks, lu, mask) < 0.05
+
+
+def test_sparselu_degree_invariant():
+    f1, a1 = sparselu.build(nb=4, bs=16, band=2, degree=1)
+    f4, a4 = sparselu.build(nb=4, bs=16, band=2, degree=4)
+    np.testing.assert_allclose(np.asarray(f1(*a1)), np.asarray(f4(*a4)),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_health_runs_and_conserves():
+    fn, args = health.build(villages=128, steps=8, degree=2)
+    treated, peak = fn(*args)
+    assert int(treated) > 0 and int(peak) >= 0
+
+
+def test_floorplan_bound_sane():
+    fn, args = floorplan.build(degree=4)
+    best = int(fn(*args))
+    assert 12 <= best < 10_000   # total cell area 22 -> bound below by it/row

@@ -1,0 +1,77 @@
+"""Fault tolerance: atomic checkpoints, torn-write detection, resume,
+deterministic data pipeline across restarts/resharding."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data.pipeline import DataConfig, batch_at
+from repro.train import checkpoint as ck
+
+
+def _state(key):
+    return {"params": {"w": jax.random.normal(key, (8, 8)),
+                       "b": jnp.zeros((8,))},
+            "opt": {"step": jnp.asarray(7, jnp.int32)}}
+
+
+def test_roundtrip(tmp_path, key):
+    state = _state(key)
+    ck.save(str(tmp_path), 7, state, meta={"arch": "t"})
+    restored, step = ck.restore(str(tmp_path), state)
+    assert step == 7
+    np.testing.assert_array_equal(np.asarray(restored["params"]["w"]),
+                                  np.asarray(state["params"]["w"]))
+
+
+def test_torn_write_detected(tmp_path, key):
+    state = _state(key)
+    ck.save(str(tmp_path), 1, state)
+    ck.save(str(tmp_path), 2, state)
+    # corrupt the newest npz
+    path = tmp_path / "ckpt_00000002.npz"
+    data = path.read_bytes()
+    path.write_bytes(data[: len(data) // 2])
+    step, manifest = ck.latest_valid(str(tmp_path))
+    assert step == 1  # falls back to the older intact checkpoint
+
+
+def test_gc_keeps_latest(tmp_path, key):
+    state = _state(key)
+    for s in range(1, 6):
+        ck.save(str(tmp_path), s, state, keep=2)
+    files = sorted(f for f in os.listdir(tmp_path) if f.endswith(".json"))
+    assert files == ["ckpt_00000004.json", "ckpt_00000005.json"]
+
+
+def test_no_checkpoint_raises(tmp_path, key):
+    with pytest.raises(FileNotFoundError):
+        ck.restore(str(tmp_path), _state(key))
+
+
+def test_data_pipeline_deterministic():
+    cfg = DataConfig(vocab_size=1000, seq_len=16, global_batch=8, seed=3)
+    a = batch_at(cfg, 5)
+    b = batch_at(cfg, 5)
+    np.testing.assert_array_equal(np.asarray(a["tokens"]),
+                                  np.asarray(b["tokens"]))
+    c = batch_at(cfg, 6)
+    assert not np.array_equal(np.asarray(a["tokens"]), np.asarray(c["tokens"]))
+
+
+def test_data_pipeline_host_slicing_is_elastic():
+    """2-host split reproduces the 1-host batch exactly (elastic re-shard)."""
+    whole = batch_at(DataConfig(1000, 16, 8, seed=1), 9)["tokens"]
+    h0 = batch_at(DataConfig(1000, 16, 8, seed=1, n_hosts=2, host_id=0), 9)["tokens"]
+    h1 = batch_at(DataConfig(1000, 16, 8, seed=1, n_hosts=2, host_id=1), 9)["tokens"]
+    np.testing.assert_array_equal(np.asarray(whole),
+                                  np.concatenate([h0, h1], axis=0))
+
+
+def test_labels_are_shifted_tokens():
+    cfg = DataConfig(vocab_size=50, seq_len=12, global_batch=2, seed=0)
+    b = batch_at(cfg, 0)
+    np.testing.assert_array_equal(np.asarray(b["tokens"][:, 1:]),
+                                  np.asarray(b["labels"][:, :-1]))

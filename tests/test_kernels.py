@@ -1,0 +1,93 @@
+"""Pallas kernel validation: shape/dtype sweeps, interpret mode vs ref.py."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.tuned_matmul import tuned_matmul
+
+
+@pytest.mark.parametrize("shape,blocks", [
+    ((128, 128, 128), (64, 64, 64)),
+    ((256, 512, 128), (128, 128, 128)),
+    ((64, 384, 256), (32, 128, 128)),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_tuned_matmul(shape, blocks, dtype, key):
+    M, K, N = shape
+    bm, bn, bk = blocks
+    x = (jax.random.normal(key, (M, K)) * 0.5).astype(dtype)
+    y = (jax.random.normal(jax.random.PRNGKey(7), (K, N)) * 0.5).astype(dtype)
+    out = tuned_matmul(x, y, bm=bm, bn=bn, bk=bk, interpret=True)
+    want = ref.matmul(x, y)
+    tol = 5e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol * 10)
+
+
+@pytest.mark.parametrize("S,D,bq,bk", [(128, 64, 64, 64), (256, 128, 128, 64),
+                                       (128, 64, 32, 128)])
+@pytest.mark.parametrize("causal,window", [(True, 0), (False, 0), (True, 32)])
+def test_flash_attention(S, D, bq, bk, causal, window, key):
+    B, H = 2, 2
+    ks = jax.random.split(key, 3)
+    q, k, v = [(jax.random.normal(kk, (B, S, H, D)) * 0.5).astype(jnp.float32)
+               for kk in ks]
+    out = ops.attention(q, k, v, causal=causal, window=window,
+                        block_q=bq, block_k=bk)
+    want = ref.flash_attention(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("T,N,bt", [(64, 16, 32), (128, 32, 128), (96, 8, 32)])
+def test_wkv_kernel(T, N, bt, key):
+    B, H = 2, 3
+    ks = jax.random.split(key, 5)
+    r, k, v = [jax.random.normal(kk, (B, T, H, N)) * 0.3 for kk in ks[:3]]
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (B, T, H, N))) * 0.5 + 0.45
+    u = jax.random.normal(ks[4], (H, N)) * 0.1
+    s0 = jnp.zeros((B, H, N, N))
+    from repro.kernels.linear_scan import wkv_kernel
+    tr = lambda t: jnp.moveaxis(t, 1, 2)
+    out, s = wkv_kernel(tr(r), tr(k), tr(v), tr(w), u, s0, bt=bt,
+                        interpret=True)
+    want, s_want = ref.wkv_linear_scan(r, k, v, w, u, s0)
+    np.testing.assert_allclose(np.asarray(jnp.moveaxis(out, 1, 2)),
+                               np.asarray(want), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(s_want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("T,P,N,bt", [(64, 8, 16, 32), (128, 16, 16, 64)])
+def test_ssd_kernel(T, P, N, bt, key):
+    B, H = 2, 3
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (B, T, H, P)) * 0.3
+    b = jax.random.normal(ks[1], (B, T, N)) * 0.3
+    c = jax.random.normal(ks[2], (B, T, N)) * 0.3
+    dt = jax.nn.softplus(jax.random.normal(ks[3], (B, T, H)))
+    a = -jnp.exp(jax.random.normal(ks[4], (H,)) * 0.3)
+    s0 = jnp.zeros((B, H, P, N))
+    y, s = ops.ssd(x, b, c, dt, a, s0, bt=bt)
+    want, s_want = ref.ssd_linear_scan(x, b, c, dt, a, s0)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(s_want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_wkv_kernel_chunked_state_passing(key):
+    """Multiple time tiles must thread state exactly (tile boundaries)."""
+    B, T, H, N = 1, 64, 1, 8
+    ks = jax.random.split(key, 4)
+    r, k, v = [jax.random.normal(kk, (B, T, H, N)) * 0.3 for kk in ks[:3]]
+    w = jnp.full((B, T, H, N), 0.9)
+    u = jnp.zeros((H, N))
+    s0 = jax.random.normal(ks[3], (B, H, N, N)) * 0.1
+    out8, _ = ops.wkv(r, k, v, w, u, s0, bt=8)
+    out64, _ = ops.wkv(r, k, v, w, u, s0, bt=64)
+    np.testing.assert_allclose(np.asarray(out8), np.asarray(out64),
+                               rtol=1e-6, atol=1e-6)

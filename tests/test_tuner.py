@@ -1,0 +1,80 @@
+"""Autotuner + decision tree: greedy search improves a synthetic cost
+surface; dtree recovers a separable rule; corpus plumbing works."""
+import numpy as np
+
+from repro.core.counters import Counters
+from repro.core.dtree import DecisionTree, features
+from repro.core.policy import RegionConfig, RegionPlan
+from repro.core.roofline import Roofline
+from repro.core.tuner import Candidate, TuneResult, autotune, canonical
+
+
+class FakeRC:
+    """RegionCounters stand-in with a controllable cost model."""
+    def __init__(self, regions):
+        self.regions = regions
+        self.total = Counters()
+        for c in regions.values():
+            self.total.add(c)
+
+    def top_regions(self, key, n):
+        items = [(r, getattr(c, key)) for r, c in self.regions.items()]
+        return sorted(items, key=lambda kv: -kv[1])[:n]
+
+
+def fake_evaluator():
+    """Cost surface: region 'layer0/attn' is memory-bound unless the plan
+    sets block_q=1024, which cuts its bytes 4x."""
+    def evaluate(plan: RegionPlan):
+        rc_cfg = plan.config_for("layer0/attn")
+        attn_bytes = 8e12 if rc_cfg.block_q != 1024 else 2e12
+        regions = {
+            "layer0/attn": Counters(flops=1e14, bytes=attn_bytes),
+            "layer0/mlp": Counters(flops=8e13, bytes=5e11),
+        }
+        rc = FakeRC(regions)
+        rl = Roofline(compute_s=rc.total.flops / 197e12,
+                      memory_s=rc.total.bytes / 819e9,
+                      collective_s=0.0)
+        return rl.bound_s, rc, rl
+    return evaluate
+
+
+def test_autotune_finds_the_win():
+    cands = [
+        Candidate("attn_blockq_1k", RegionConfig(block_q=1024), "attn"),
+        Candidate("attn_blockq_4k", RegionConfig(block_q=4096), "attn"),
+    ]
+    res = autotune(None, None, kind="train", candidates=cands,
+                   evaluate=fake_evaluator(), max_iters=4, verbose=False)
+    assert res.best_bound_s < res.baseline_bound_s * 0.5
+    assert res.plan.config_for("layer0/attn").block_q == 1024
+    assert any(h.accepted for h in res.history)
+    assert len(res.corpus) >= 1
+
+
+def test_canonical():
+    assert canonical("layer12/attn") == "layer/attn"
+    assert canonical("enc3") == "enc"
+
+
+def test_dtree_learns_separable_rule():
+    rng = np.random.default_rng(0)
+    X, y = [], []
+    for _ in range(60):
+        # memory-bound regions (low AI) want chunking; compute-bound don't
+        ai = rng.uniform(0.5, 200)
+        c = Counters(flops=ai * 1e9, bytes=1e9, link_bytes=rng.uniform(0, 1e6))
+        X.append(features(c))
+        y.append("chunk" if ai < 20 else "keep")
+    tree = DecisionTree(max_depth=4).fit(np.stack(X), y)
+    assert tree.score(np.stack(X), y) > 0.95
+    # roundtrip
+    tree2 = DecisionTree.from_json(tree.to_json())
+    assert tree2.predict(np.stack(X)) == tree.predict(np.stack(X))
+
+
+def test_dtree_single_class():
+    X = np.zeros((3, 7))
+    tree = DecisionTree().fit(X, ["a", "a", "a"])
+    assert tree.predict(X) == ["a", "a", "a"]
