@@ -4,6 +4,7 @@
   bench_smt_models  -> Figs 1-4 (applications vs SMT mode)
   bench_autotune    -> §4.2 (per-region tuning vs single global knob)
   bench_kernels     -> kernel block tuning curve (VMEM occupancy model)
+  bench_serve       -> continuous vs static batching under staggered load
 
 Prints ``name,us_per_call,derived`` CSV rows.
 """
@@ -17,10 +18,11 @@ def main() -> None:
     import benchmarks.bench_autotune as b_autotune
     import benchmarks.bench_bots as b_bots
     import benchmarks.bench_kernels as b_kernels
+    import benchmarks.bench_serve as b_serve
     import benchmarks.bench_smt_models as b_smt
 
     mods = {"bots": b_bots, "smt_models": b_smt, "autotune": b_autotune,
-            "kernels": b_kernels}
+            "kernels": b_kernels, "serve": b_serve}
     only = sys.argv[1] if len(sys.argv) > 1 else None
     print("name,us_per_call,derived")
     for name, mod in mods.items():

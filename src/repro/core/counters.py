@@ -89,6 +89,15 @@ class Counters:
     collective_ops: int = 0
     ops: int = 0
 
+    def scaled(self, mult: float) -> "Counters":
+        """A copy with flops/bytes terms scaled (e.g. by pool occupancy:
+        the serve-time decider attributes a fixed-shape step's measured
+        counters to the fraction of slots doing useful work)."""
+        return Counters(flops=self.flops * mult, bytes=self.bytes * mult,
+                        collective_bytes=self.collective_bytes * mult,
+                        link_bytes=self.link_bytes * mult,
+                        collective_ops=self.collective_ops, ops=self.ops)
+
     def add(self, other: "Counters", mult: float = 1.0,
             skip_bytes: bool = False):
         self.flops += other.flops * mult

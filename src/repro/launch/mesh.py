@@ -2,14 +2,30 @@
 this module never touches jax device state)."""
 from __future__ import annotations
 
+import inspect
+
 import jax
+
+
+def _axis_types_kwargs(n_axes: int) -> dict:
+    """``axis_types=`` kwarg for jax.make_mesh, when this jax supports it.
+
+    ``jax.sharding.AxisType`` (and the matching ``axis_types`` parameter on
+    ``jax.make_mesh``) only exist on newer jax; on 0.4.x the default mesh
+    behaviour is already Auto, so omitting the kwarg is equivalent.
+    """
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return {}
+    if "axis_types" not in inspect.signature(jax.make_mesh).parameters:
+        return {}
+    return {"axis_types": (axis_type.Auto,) * n_axes}
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **_axis_types_kwargs(len(axes)))
 
 
 def make_host_mesh(data: int = 1, model: int = 1):
@@ -18,4 +34,4 @@ def make_host_mesh(data: int = 1, model: int = 1):
     data = min(data, n)
     model = max(min(model, n // data), 1)
     return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+                         **_axis_types_kwargs(2))

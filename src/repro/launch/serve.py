@@ -1,29 +1,102 @@
-"""Serving launcher: batched generation with the Engine (CPU-scale reduced
-configs; the production-mesh serve path is exercised by the dry-run).
+"""Serving launcher: request-trace-driven continuous batching.
+
+Builds a synthetic arrival trace (poisson / staggered / burst), replays it
+against the continuous-batching engine (or the static lockstep baseline for
+comparison), and reports throughput and latency percentiles.  A decision
+tree trained by the autotuner (``--dtree``) switches on counter-driven plan
+selection at serve time.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-8b --reduced \
-      --batch 4 --prompt-len 32 --gen 16
+      --requests 8 --prompt-len 16 --gen-min 4 --gen-max 16 \
+      --arrival poisson --rate 20 --slots 4
+
+  # static lockstep baseline on the same trace
+  PYTHONPATH=src python -m repro.launch.serve ... --mode static
 """
 from __future__ import annotations
 
 import argparse
+import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.registry import get_config
 from repro.models import model as model_mod
 from repro.serve.engine import Engine, ServeConfig
+from repro.serve.scheduler import Request, summarize
+
+
+def build_trace(args, vocab_size: int) -> list[Request]:
+    """Deterministic request trace from the CLI arrival model."""
+    rng = np.random.default_rng(args.seed)
+    if args.arrival == "poisson":
+        gaps = rng.exponential(1.0 / args.rate, args.requests)
+    elif args.arrival == "staggered":
+        gaps = np.full(args.requests, 1.0 / args.rate)
+    else:  # burst
+        gaps = np.zeros(args.requests)
+    arrivals = np.concatenate([[0.0], np.cumsum(gaps)[:-1]])
+    reqs = []
+    for i in range(args.requests):
+        gen = int(rng.integers(args.gen_min, args.gen_max + 1))
+        prompt = rng.integers(0, vocab_size, args.prompt_len).astype(np.int32)
+        reqs.append(Request(rid=i, prompt=prompt, max_new_tokens=gen,
+                            arrival_s=float(arrivals[i])))
+    return reqs
+
+
+def run_static(engine: Engine, reqs: list[Request], slots: int) -> dict:
+    """Lockstep baseline: group FIFO into batches of ``slots``, wait for the
+    whole group to arrive, decode everyone for the group's longest budget."""
+    cfg = engine.model.cfg
+    t0 = time.perf_counter()
+    for i in range(0, len(reqs), slots):
+        group = reqs[i:i + slots]
+        wait = max(r.arrival_s for r in group) - (time.perf_counter() - t0)
+        if wait > 0:
+            time.sleep(wait)
+        prompts = jnp.stack([jnp.asarray(r.prompt) for r in group])
+        extra = None
+        if cfg.family == "encdec":   # stub modality frontend (as in dry-run)
+            extra = {"frames": jnp.zeros(
+                (len(group), cfg.enc_len, cfg.d_model), jnp.bfloat16)}
+        n_steps = max(r.max_new_tokens for r in group)
+        out = np.asarray(engine.generate(prompts, n_steps, extra)["tokens"])
+        t = time.perf_counter() - t0
+        for j, r in enumerate(group):
+            r.out_tokens = out[j, :r.max_new_tokens].tolist()
+            r.t_first = r.t_done = t
+            from repro.serve.scheduler import RequestState
+            r.state = RequestState.DONE
+    return {"requests": reqs, "stats": summarize(reqs)}
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="stablelm-1.6b")
     ap.add_argument("--reduced", action="store_true", default=True)
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--full", dest="reduced", action="store_false")
+    ap.add_argument("--mode", choices=("continuous", "static"),
+                    default="continuous")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen-min", type=int, default=4)
+    ap.add_argument("--gen-max", type=int, default=16)
+    ap.add_argument("--arrival", choices=("poisson", "staggered", "burst"),
+                    default="poisson")
+    ap.add_argument("--rate", type=float, default=20.0,
+                    help="arrival rate, requests/s (poisson/staggered)")
+    ap.add_argument("--slots", type=int, default=4,
+                    help="KV pool size / static batch width")
+    ap.add_argument("--prefill-bucket", type=int, default=8)
+    ap.add_argument("--max-len", type=int, default=0,
+                    help="cache length (default: prompt+gen headroom)")
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--eos-id", type=int, default=-1)
+    ap.add_argument("--dtree", default="",
+                    help="DecisionTree json from the autotuner corpus")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -32,22 +105,36 @@ def main(argv=None):
         cfg = cfg.reduced()
     model = model_mod.build(cfg)
     params = model.init(jax.random.PRNGKey(args.seed))
-    engine = Engine(model, params, serve_cfg=ServeConfig(
-        max_len=args.prompt_len + args.gen + 1,
-        temperature=args.temperature, seed=args.seed))
 
-    key = jax.random.PRNGKey(args.seed + 1)
-    prompts = jax.random.randint(key, (args.batch, args.prompt_len), 0,
-                                 cfg.vocab_size, dtype=jnp.int32)
-    extra = {}
-    if cfg.family == "encdec":
-        extra["frames"] = jnp.zeros((args.batch, cfg.enc_len, cfg.d_model),
-                                    jnp.bfloat16)
-    out = engine.generate(prompts, args.gen, extra or None)
-    print("generated:", out["tokens"].shape)
-    print(f"prefill {out['prefill_s']*1e3:.1f} ms, "
-          f"decode {out['decode_tok_per_s']:.0f} tok/s")
-    return out
+    max_len = args.max_len or args.prompt_len + args.gen_max + 1
+    dtree = None
+    if args.dtree:
+        from repro.core.dtree import DecisionTree
+        dtree = DecisionTree.from_json(open(args.dtree).read())
+    engine = Engine(model, params, serve_cfg=ServeConfig(
+        max_len=max_len, temperature=args.temperature, seed=args.seed,
+        max_slots=args.slots, eos_id=args.eos_id,
+        prefill_bucket=args.prefill_bucket), dtree=dtree)
+
+    reqs = build_trace(args, cfg.vocab_size)
+    if args.mode == "static":
+        res = run_static(engine, reqs, args.slots)
+    else:
+        res = engine.serve(reqs)
+        for n_active, decisions in res["decisions"]:
+            print(f"[plan] load={n_active}: " + ", ".join(
+                f"{r}->{c}" for r, c in decisions))
+
+    for r in reqs:
+        print(f"req {r.rid:3d} arrive {r.arrival_s*1e3:7.1f} ms  "
+              f"gen {len(r.out_tokens):3d} tok  "
+              f"latency {(r.t_done - r.arrival_s)*1e3:7.1f} ms")
+    s = res["stats"]
+    print(f"{args.mode}: {s['n_done']} requests, {s['tokens']} tokens in "
+          f"{s['wall_s']:.2f} s -> {s['tok_per_s']:.1f} tok/s  "
+          f"p50 {s['latency_p50_s']*1e3:.0f} ms  "
+          f"p99 {s['latency_p99_s']*1e3:.0f} ms")
+    return res
 
 
 if __name__ == "__main__":

@@ -1,0 +1,81 @@
+"""Slot-based KV-cache pool for continuous batching.
+
+The pool holds ``n_slots`` independent single-request caches stacked on a
+leading slot axis: each leaf of a per-request cache tree (shape ``(1, ...)``
+for KV leaves, scalar for ``pos``) becomes a pooled leaf of shape
+``(n_slots, 1, ...)`` / ``(n_slots,)``.  The decode step vmaps the model's
+single-request ``decode_step`` over that axis, so every slot carries its own
+sequence position — the property lockstep batching lacks and the one that
+lets requests join/leave the batch mid-flight.
+
+Slot lifecycle is explicit: :meth:`alloc` hands out a free slot id,
+:meth:`write` splices a freshly prefilled cache into the pool (jitted, with
+buffer donation, traced once — the slot index is a traced scalar so writes
+to different slots share one executable), and :meth:`free` returns the slot.
+Freed slots keep their stale contents; correctness relies on allocation
+always overwriting via :meth:`write` (or :meth:`empty_slot_cache` for
+promptless requests), never on zeroing.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def _splice(pool: Any, cache: Any, slot: jax.Array) -> Any:
+    return jax.tree.map(
+        lambda p, c: jax.lax.dynamic_update_slice_in_dim(
+            p, c[None], slot, axis=0), pool, cache)
+
+
+class SlotKVPool:
+    """Fixed-shape pool of per-request caches with a free-slot list."""
+
+    def __init__(self, slot_cache_avals: Any, n_slots: int):
+        if n_slots < 1:
+            raise ValueError("n_slots must be >= 1")
+        self.n_slots = n_slots
+        self.slot_avals = slot_cache_avals
+        self.pool = jax.tree.map(
+            lambda s: jnp.zeros((n_slots,) + tuple(s.shape), s.dtype),
+            slot_cache_avals)
+        self._free = list(range(n_slots - 1, -1, -1))   # pop() -> slot 0 first
+        self._active: set[int] = set()
+        self._write = jax.jit(_splice, donate_argnums=(0,))
+
+    # -- slot accounting -----------------------------------------------------
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_active(self) -> int:
+        return len(self._active)
+
+    def alloc(self) -> Optional[int]:
+        """Claim a free slot (None when the pool is full)."""
+        if not self._free:
+            return None
+        slot = self._free.pop()
+        self._active.add(slot)
+        return slot
+
+    def free(self, slot: int) -> None:
+        if slot not in self._active:
+            raise ValueError(f"slot {slot} is not active (double free?)")
+        self._active.remove(slot)
+        self._free.append(slot)
+
+    # -- cache data ----------------------------------------------------------
+    def write(self, slot: int, cache: Any) -> None:
+        """Splice one request's cache into the pool at ``slot`` (donating)."""
+        if slot not in self._active:
+            raise ValueError(f"slot {slot} is not allocated")
+        self.pool = self._write(self.pool, cache, jnp.asarray(slot, jnp.int32))
+
+    def empty_slot_cache(self) -> Any:
+        """A zeroed single-request cache (pos=0): the pre-prompt state."""
+        return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                            self.slot_avals)

@@ -1,22 +1,50 @@
-"""Batched serving engine: prefill + decode with KV caches.
+"""Serving engine: static lockstep batching plus continuous batching.
 
-The engine wraps the model's prefill/decode steps in jitted functions (with
-buffer donation for the cache), supports greedy and temperature sampling,
-and tracks per-request state for continuous batched decoding.  On the
-production mesh the same functions lower with cache shardings from
-distributed/sharding.py (the dry-run exercises that path).
+Two paths share one Engine:
+
+* :meth:`Engine.generate` — the original static path: prefill a ``(B, S)``
+  batch, then decode all rows in lockstep for a fixed number of steps.
+  Simple, but every row pays for the slowest/longest row and nothing can
+  join until the whole batch finishes.
+
+* :meth:`Engine.serve` — continuous batching over a slot-based KV-cache
+  pool (:mod:`repro.serve.cache`).  Requests are admitted FIFO from an
+  arrival trace (:mod:`repro.serve.scheduler`) into free slots; the decode
+  step is ONE fixed-shape jitted function over the whole pool (the model's
+  single-request ``decode_step`` vmapped over the slot axis, cache buffers
+  donated), so jit caches stay warm no matter how batch composition
+  changes — inactive slots simply decode garbage that the host ignores.
+  Per-slot ``pos`` means a request that finishes frees its slot
+  immediately and the next request joins mid-flight, no lockstep barrier.
+
+  Prefill fills one slot at a time: the prompt minus its last token runs
+  through the model's prefill (padded up to ``prefill_bucket`` on families
+  where right-padding is sound, exact-length otherwise), and the last
+  prompt token is fed through the shared decode step — so the first
+  generated token takes the same code path as every later one.
+
+The paper loop runs at serve time: when a :class:`repro.core.dtree
+.DecisionTree` (trained on the autotuner's counter->winning-config corpus)
+is supplied, :class:`PlanDecider` reads the decode step's measured region
+counters (:mod:`repro.core.counters`), scales them by pool occupancy, and
+predicts a per-region :class:`RegionConfig` — picking the ``RegionPlan``
+for the current load without re-running search (§4.2's "suggest ... without
+search" proposal, moved from offline tuning into the serving hot path).
 """
 from __future__ import annotations
 
+import copy
 import dataclasses
 import time
-from typing import Optional
+from typing import Any, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.core.policy import RegionPlan, null_plan
+from repro.core.policy import RegionConfig, RegionPlan, null_plan
 from repro.models.model import Model
+from repro.serve.scheduler import Request, Scheduler, summarize
 
 
 @dataclasses.dataclass
@@ -24,25 +52,102 @@ class ServeConfig:
     max_len: int = 512
     temperature: float = 0.0
     seed: int = 0
+    # -- continuous batching -------------------------------------------------
+    max_slots: int = 4          # KV pool size == max in-flight requests
+    eos_id: int = -1            # -1: no EOS (per-request eos_id overrides)
+    prefill_bucket: int = 0     # 0 = exact-length prefill jits; >0 = pad to
+                                # the bucket where right-padding is sound
+    autoplan: bool = True       # consult the dtree (when one is supplied)
+    autoplan_top_n: int = 2     # hot regions consulted per (re)selection
+
+
+def _overlay(base: RegionConfig, cand: RegionConfig) -> RegionConfig:
+    """Layer a candidate onto an existing region config: rules merge, and
+    only knobs the candidate explicitly sets (non-default) override — a
+    hand-tuned base plan keeps its block sizes when the tree votes a
+    rules-only candidate."""
+    defaults = RegionConfig()
+    out = dataclasses.replace(base, rules={**base.rules, **cand.rules})
+    for f in dataclasses.fields(RegionConfig):
+        if f.name == "rules":
+            continue
+        v = getattr(cand, f.name)
+        if v != getattr(defaults, f.name):
+            out = dataclasses.replace(out, **{f.name: v})
+    return out
+
+
+class PlanDecider:
+    """Counters -> DecisionTree -> RegionPlan, the paper loop at serve time.
+
+    The tree's classes are the tuner's candidate names (the corpus emitted
+    by ``autotune``); ``decide`` looks at the hottest regions of a measured
+    step, scales their counters by pool occupancy (``load_frac``) so the
+    prediction tracks load, and applies the predicted candidate's
+    RegionConfig wherever it is applicable.  No search is re-run.
+    """
+
+    def __init__(self, tree, kind: str = "decode", candidates=None):
+        from repro.core.tuner import default_candidates
+        self.tree = tree
+        self.by_name = {c.name: c for c in
+                        (candidates if candidates is not None
+                         else default_candidates(kind))}
+
+    def decide(self, rc, base_plan: RegionPlan, load_frac: float = 1.0,
+               top_n: int = 2):
+        """Returns (plan, decisions): decisions is [(region_prefix, class)]."""
+        from repro.core.dtree import features
+        from repro.core.tuner import canonical
+        plan = copy.deepcopy(base_plan)
+        decisions: list[tuple[str, str]] = []
+        seen: set[str] = set()
+        for region_name, _ in rc.top_regions("flops", 16):
+            prefix = canonical(region_name)
+            if prefix in seen:
+                continue
+            seen.add(prefix)
+            cls = self.tree.predict_one(
+                features(rc.regions[region_name].scaled(load_frac)))
+            cand = self.by_name.get(cls)
+            if cand is not None and cand.applies_to in prefix:
+                base = plan.region_configs.get(prefix, RegionConfig())
+                plan.region_configs[prefix] = _overlay(base, cand.config)
+            decisions.append((prefix, cls))
+            if len(seen) >= top_n:
+                break
+        return plan, decisions
 
 
 class Engine:
     def __init__(self, model: Model, params, plan: Optional[RegionPlan] = None,
-                 serve_cfg: ServeConfig = ServeConfig()):
+                 serve_cfg: Optional[ServeConfig] = None, dtree=None):
         self.model = model
         self.params = params
         self.plan = plan or null_plan()
-        self.cfg = serve_cfg
+        # a fresh ServeConfig per Engine (a dataclass default instance would
+        # be shared by every Engine and mutate across instances)
+        self.cfg = serve_cfg if serve_cfg is not None else ServeConfig()
+        self.dtree = dtree
 
         def prefill_fn(params, batch):
             return model.prefill(params, batch, self.plan,
-                                 max_len=serve_cfg.max_len)
+                                 max_len=self.cfg.max_len)
 
         def decode_fn(params, cache, tokens):
             return model.decode(params, cache, tokens, self.plan)
 
         self._prefill = jax.jit(prefill_fn)
         self._decode = jax.jit(decode_fn, donate_argnums=(1,))
+
+        # -- continuous-batching state (built lazily by _ensure_pool) --------
+        self._pool = None
+        self._slot_prefills: dict[int, Any] = {}    # feed_len -> jitted fn
+        self._pool_steps: dict[tuple, Any] = {}     # decisions -> compiled
+        self._pool_step = None
+        self._pool_rc = None                        # counters of base step
+        self._load_bucket: Optional[int] = None
+        self.decisions_log: list = []
 
     def _sample(self, logits, key):
         logits = logits[:, -1, :].astype(jnp.float32)
@@ -51,6 +156,9 @@ class Engine:
         return jax.random.categorical(
             key, logits / self.cfg.temperature).astype(jnp.int32)
 
+    # ------------------------------------------------------------------
+    # Static lockstep batching (the baseline path)
+    # ------------------------------------------------------------------
     def generate(self, prompts: jax.Array, n_steps: int,
                  extra_inputs: Optional[dict] = None) -> dict:
         """prompts: (B, S) int32 -> generated (B, n_steps) + stats."""
@@ -80,4 +188,189 @@ class Engine:
             "prefill_s": t_prefill,
             "decode_s": t_decode,
             "decode_tok_per_s": B * max(n_steps - 1, 1) / max(t_decode, 1e-9),
+        }
+
+    # ------------------------------------------------------------------
+    # Continuous batching
+    # ------------------------------------------------------------------
+    def _pad_safe(self) -> bool:
+        """Right-padding the prompt is sound only for positional full-KV
+        caches: pad K/V land at positions >= pos (masked, then overwritten
+        by decode writes).  Recurrent state (ssm/hybrid) and sliding-window
+        rings would absorb the pads."""
+        cfg = self.model.cfg
+        return cfg.family in ("dense", "moe", "vlm") and not cfg.swa_window
+
+    def _slot_cache_avals(self):
+        tok = jax.ShapeDtypeStruct((1, 2), jnp.int32)
+        return jax.eval_shape(
+            lambda p, t: self.model.prefill(
+                p, {"tokens": t}, self.plan, max_len=self.cfg.max_len)[1],
+            self.params, tok)
+
+    def _ensure_pool(self):
+        if self._pool is not None:
+            return
+        if self.model.cfg.family == "encdec":
+            raise NotImplementedError(
+                "continuous batching supports decoder-only families; "
+                "use generate() for encdec")
+        from repro.serve.cache import SlotKVPool
+        self._pool = SlotKVPool(self._slot_cache_avals(), self.cfg.max_slots)
+        self._pool_step = self._build_pool_step(self.plan)
+        self._pool_steps[()] = self._pool_step
+        if self.dtree is not None and self.cfg.autoplan:
+            from repro.core import counters as counters_mod
+            self._pool_rc = counters_mod.collect(self._pool_step)
+
+    def _build_pool_step(self, plan: RegionPlan):
+        """AOT-compile one decode+sample step over the whole slot pool."""
+        model, temp = self.model, self.cfg.temperature
+
+        def step(params, pool, tokens, key):
+            def one(cache, tok):
+                logits, new_cache = model.decode(params, cache,
+                                                 tok[None, None], plan)
+                return logits[0, -1, :].astype(jnp.float32), new_cache
+            logits, pool = jax.vmap(one)(pool, tokens)
+            if temp <= 0:
+                nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            else:
+                keys = jax.random.split(key, logits.shape[0])
+                nxt = jax.vmap(
+                    lambda k, l: jax.random.categorical(k, l / temp))(
+                        keys, logits).astype(jnp.int32)
+            return nxt, pool
+
+        return jax.jit(step, donate_argnums=(1,)).lower(
+            self.params, self._pool.pool,
+            jnp.zeros((self._pool.n_slots,), jnp.int32),
+            jax.random.PRNGKey(0)).compile()
+
+    def _prefill_slot(self, prompt: np.ndarray):
+        """Fill a fresh single-request cache with prompt[:-1]; the last
+        prompt token is returned to be fed through the pool decode step
+        (which then yields the first generated token)."""
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if prompt.size < 2:
+            return self._pool.empty_slot_cache(), int(prompt[-1])
+        feed = prompt[:-1]
+        true_len = feed.size
+        if self.cfg.prefill_bucket and self._pad_safe():
+            b = self.cfg.prefill_bucket
+            padded = min(-(-true_len // b) * b, self.cfg.max_len)
+            if padded > true_len:
+                feed = np.pad(feed, (0, padded - true_len))
+        fn = self._slot_prefills.get(feed.size)
+        if fn is None:
+            def pf(params, tokens, true_len):
+                _, cache = self.model.prefill(
+                    params, {"tokens": tokens}, self.plan,
+                    max_len=self.cfg.max_len)
+                cache = dict(cache)
+                cache["pos"] = jnp.asarray(true_len, jnp.int32)
+                return cache
+            fn = jax.jit(pf)
+            self._slot_prefills[feed.size] = fn
+        cache = fn(self.params, jnp.asarray(feed)[None],
+                   jnp.asarray(true_len, jnp.int32))
+        return cache, int(prompt[-1])
+
+    def _maybe_replan(self, n_active: int):
+        """On load-bucket changes, re-pick the decode plan via the dtree."""
+        if self._pool_rc is None:
+            return
+        bucket = 1 << max(0, n_active - 1).bit_length()   # next power of two
+        if bucket == self._load_bucket:
+            return
+        self._load_bucket = bucket
+        load_frac = min(bucket, self._pool.n_slots) / self._pool.n_slots
+        plan, decisions = PlanDecider(self.dtree).decide(
+            self._pool_rc, self.plan, load_frac=load_frac,
+            top_n=self.cfg.autoplan_top_n)
+        key = tuple(decisions)
+        if key not in self._pool_steps:
+            self._pool_steps[key] = self._build_pool_step(plan)
+        self._pool_step = self._pool_steps[key]
+        self.decisions_log.append((n_active, decisions))
+
+    def _validate(self, req: Request):
+        cfg = self.model.cfg
+        if cfg.family != "ssm" and not cfg.swa_window:
+            need = req.prompt.size - 1 + req.max_new_tokens
+            if need > self.cfg.max_len:
+                raise ValueError(
+                    f"request {req.rid}: prompt+generation ({need}) exceeds "
+                    f"max_len ({self.cfg.max_len})")
+
+    def serve(self, requests: Sequence[Request]) -> dict:
+        """Run a trace of Requests to completion with continuous batching.
+
+        Arrivals are replayed on the wall clock relative to serve() entry;
+        requests with arrival_s=0 are all admissible immediately.  Mutates
+        the Request objects in place (out_tokens, timings) and returns
+        {"requests", "stats", "steps", "decisions"}.
+        """
+        self._ensure_pool()
+        for r in requests:
+            self._validate(r)
+        # each trace re-selects from scratch (compiled steps stay cached);
+        # only this run's decisions are returned
+        self._load_bucket = None
+        log_start = len(self.decisions_log)
+        sched = Scheduler()
+        for r in requests:
+            sched.submit(r)
+        sched.sort_queue()
+
+        pool = self._pool
+        pending = np.zeros((pool.n_slots,), np.int32)
+        key = jax.random.PRNGKey(self.cfg.seed)
+        t0 = time.perf_counter()
+        now = lambda: time.perf_counter() - t0  # noqa: E731
+        steps = 0
+
+        while not sched.done():
+            t = now()
+            # admit: every free slot takes the next arrived request (FIFO)
+            while pool.n_free and sched.has_ready(t):
+                req = sched.pop_ready(t)
+                slot = pool.alloc()
+                cache, first_tok = self._prefill_slot(req.prompt)
+                pool.write(slot, cache)
+                pending[slot] = first_tok
+                sched.bind(req, slot, now())
+            if not sched.active:
+                nxt = sched.next_arrival()
+                if nxt is None:
+                    break
+                dt = nxt - now()
+                if dt > 0:
+                    time.sleep(min(dt, 0.05))
+                continue
+
+            self._maybe_replan(len(sched.active))
+            key, sub = jax.random.split(key)
+            toks, pool.pool = self._pool_step(
+                self.params, pool.pool, jnp.asarray(pending), sub)
+            toks_np = np.asarray(toks)
+            steps += 1
+            t = now()
+            for slot in list(sched.active):
+                req = sched.active[slot]
+                tok = int(toks_np[slot])
+                if not req.out_tokens:
+                    req.t_first = t
+                req.out_tokens.append(tok)
+                pending[slot] = tok
+                eos = req.eos_id if req.eos_id is not None else self.cfg.eos_id
+                if len(req.out_tokens) >= req.max_new_tokens or tok == eos:
+                    sched.complete(req, t)
+                    pool.free(slot)
+
+        return {
+            "requests": list(requests),
+            "stats": summarize(requests),
+            "steps": steps,
+            "decisions": list(self.decisions_log[log_start:]),
         }

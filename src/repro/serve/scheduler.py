@@ -1,0 +1,131 @@
+"""Request scheduler for the continuous-batching engine.
+
+Requests move WAITING -> PREFILL -> DECODE -> DONE.  Admission is strict
+FIFO over the arrival-ordered queue: a request becomes admissible once its
+``arrival_s`` has passed (trace-driven serving replays an arrival process),
+and is admitted as soon as a cache slot is free — including mid-flight,
+while other slots are still decoding.  Completion is by per-request token
+budget (``max_new_tokens``) or an EOS token id.
+
+The scheduler owns lifecycle bookkeeping only; cache slots themselves are
+owned by :class:`repro.serve.cache.SlotKVPool` (the engine mediates).
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from collections import deque
+from typing import Optional, Sequence
+
+import numpy as np
+
+
+class RequestState(enum.Enum):
+    WAITING = "waiting"
+    PREFILL = "prefill"
+    DECODE = "decode"
+    DONE = "done"
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request in a serve trace."""
+    rid: int
+    prompt: np.ndarray                  # (L,) int32 token ids, L >= 1
+    max_new_tokens: int
+    arrival_s: float = 0.0
+    eos_id: Optional[int] = None        # falls back to ServeConfig.eos_id
+    # -- runtime state (filled in by the scheduler/engine) -------------------
+    state: RequestState = RequestState.WAITING
+    slot: Optional[int] = None
+    out_tokens: list = dataclasses.field(default_factory=list)
+    t_admit: Optional[float] = None     # seconds since serve() start
+    t_first: Optional[float] = None     # first generated token
+    t_done: Optional[float] = None
+
+    def __post_init__(self):
+        self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
+        if self.prompt.size < 1:
+            raise ValueError(f"request {self.rid}: empty prompt")
+        if self.max_new_tokens < 1:
+            raise ValueError(f"request {self.rid}: max_new_tokens < 1")
+
+
+class Scheduler:
+    """FIFO admission queue + active-set tracking."""
+
+    def __init__(self):
+        self._queue: deque[Request] = deque()
+        self.active: dict[int, Request] = {}     # slot -> request
+        self.finished: list[Request] = []
+
+    def submit(self, req: Request) -> None:
+        if req.state is not RequestState.WAITING:
+            raise ValueError(f"request {req.rid} already {req.state}")
+        self._queue.append(req)
+
+    def sort_queue(self) -> None:
+        """Order the queue by arrival time (stable, so rid breaks ties)."""
+        self._queue = deque(sorted(self._queue, key=lambda r: r.arrival_s))
+
+    # -- admission -----------------------------------------------------------
+    def has_ready(self, now_s: float) -> bool:
+        return bool(self._queue) and self._queue[0].arrival_s <= now_s
+
+    def pop_ready(self, now_s: float) -> Optional[Request]:
+        if not self.has_ready(now_s):
+            return None
+        req = self._queue.popleft()
+        req.state = RequestState.PREFILL
+        return req
+
+    def bind(self, req: Request, slot: int, now_s: float) -> None:
+        """Attach an admitted (prefilled) request to its cache slot."""
+        if slot in self.active:
+            raise ValueError(f"slot {slot} already bound to "
+                             f"request {self.active[slot].rid}")
+        if req.state is not RequestState.PREFILL:
+            raise ValueError(f"request {req.rid} not in PREFILL")
+        req.state = RequestState.DECODE
+        req.slot = slot
+        req.t_admit = now_s
+        self.active[slot] = req
+
+    # -- completion ----------------------------------------------------------
+    def complete(self, req: Request, now_s: float) -> None:
+        if self.active.get(req.slot) is not req:
+            raise ValueError(f"request {req.rid} not active on slot {req.slot}")
+        del self.active[req.slot]
+        req.slot = None
+        req.state = RequestState.DONE
+        req.t_done = now_s
+        self.finished.append(req)
+
+    def done(self) -> bool:
+        return not self._queue and not self.active
+
+    def next_arrival(self) -> Optional[float]:
+        return self._queue[0].arrival_s if self._queue else None
+
+
+def summarize(requests: Sequence[Request]) -> dict:
+    """Aggregate throughput/latency stats over a finished trace."""
+    done = [r for r in requests if r.state is RequestState.DONE]
+    if not done:
+        return {"n_done": 0, "tokens": 0, "tok_per_s": 0.0}
+    tokens = sum(len(r.out_tokens) for r in done)
+    t_end = max(r.t_done for r in done)
+    t_start = min(r.arrival_s for r in done)
+    lat = np.array([r.t_done - r.arrival_s for r in done])
+    ttft = np.array([r.t_first - r.arrival_s for r in done
+                     if r.t_first is not None])
+    span = max(t_end - t_start, 1e-9)
+    return {
+        "n_done": len(done),
+        "tokens": tokens,
+        "wall_s": span,
+        "tok_per_s": tokens / span,
+        "latency_p50_s": float(np.percentile(lat, 50)),
+        "latency_p99_s": float(np.percentile(lat, 99)),
+        "ttft_p50_s": float(np.percentile(ttft, 50)) if ttft.size else 0.0,
+    }

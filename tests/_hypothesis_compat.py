@@ -1,0 +1,74 @@
+"""Minimal stand-in for the slice of hypothesis this suite uses.
+
+The property tests only need ``given``/``settings`` and the ``integers``,
+``sampled_from`` and ``lists`` strategies.  When real hypothesis is
+installed the test modules import it directly; when it is absent they fall
+back to this shim, which draws ``max_examples`` deterministic pseudo-random
+examples per test (seeded rng, so failures are reproducible) instead of
+doing guided search/shrinking.  Good enough to keep the invariants
+exercised everywhere the suite runs.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+
+import numpy as np
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng: np.random.Generator):
+        return self._draw(rng)
+
+
+class strategies:
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        return _Strategy(lambda rng: int(rng.integers(min_value,
+                                                      max_value + 1)))
+
+    @staticmethod
+    def sampled_from(options) -> _Strategy:
+        options = list(options)
+        return _Strategy(lambda rng: options[int(rng.integers(len(options)))])
+
+    @staticmethod
+    def lists(elements: _Strategy, min_size: int = 0,
+              max_size: int = 10) -> _Strategy:
+        def draw(rng):
+            n = int(rng.integers(min_size, max_size + 1))
+            return [elements.example(rng) for _ in range(n)]
+        return _Strategy(draw)
+
+
+def settings(max_examples: int = 20, **_ignored):
+    """Records max_examples on the function (order-independent with given)."""
+    def deco(fn):
+        fn._shim_settings = {"max_examples": max_examples}
+        return fn
+    return deco
+
+
+def given(**strategy_kwargs):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_shim_settings", {}).get("max_examples", 20)
+            rng = np.random.default_rng(0)
+            for _ in range(n):
+                drawn = {k: s.example(rng)
+                         for k, s in strategy_kwargs.items()}
+                fn(*args, **kwargs, **drawn)
+        wrapper._shim_settings = getattr(fn, "_shim_settings", {})
+        # hide drawn params from pytest's fixture resolution (remaining
+        # params, e.g. real fixtures, stay visible — as with hypothesis)
+        sig = inspect.signature(fn)
+        params = [p for name, p in sig.parameters.items()
+                  if name not in strategy_kwargs]
+        wrapper.__signature__ = sig.replace(parameters=params)
+        del wrapper.__wrapped__
+        return wrapper
+    return deco

@@ -2,12 +2,17 @@
 the hillclimb's correctness gate (EXPERIMENTS.md §Perf)."""
 import dataclasses
 
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
+
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+except ImportError:  # fall back to the deterministic local shim
+    from _hypothesis_compat import given, settings
+    from _hypothesis_compat import strategies as st
 
 from repro.configs.registry import get_config
 from repro.core.policy import RegionConfig, RegionPlan, null_plan

@@ -1,11 +1,16 @@
 """Property tests (hypothesis) on the sharding-legality invariants: every
 spec the plan engine emits must be accepted by jax.jit (divisibility, no
 double-use of a mesh axis), for arbitrary shapes/axis assignments."""
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
-from hypothesis import given, settings
 from jax.sharding import PartitionSpec as P
+
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+except ImportError:  # fall back to the deterministic local shim
+    from _hypothesis_compat import given, settings
+    from _hypothesis_compat import strategies as st
 
 from repro.core.policy import (DEFAULT_RULES, RegionConfig, RegionPlan,
                                default_plan, legal_spec)
@@ -16,8 +21,8 @@ AXES = [None, "batch", "seq", "embed", "ff", "heads", "kv_heads", "vocab",
 
 def make_mesh():
     # single CPU device: mesh of (1, 1) still exercises divisibility logic
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_host_mesh
+    return make_host_mesh(1, 1)
 
 
 class FakeMesh:

@@ -1,12 +1,18 @@
-"""Serving engine: batched generation, greedy determinism, throughput stats."""
+"""Serving: static batched generation, continuous batching over the slot
+pool (scheduler invariants, slot hygiene, static/continuous greedy
+equivalence), and counter-driven plan selection."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.configs.registry import get_config
+from repro.core.counters import Counters
 from repro.models.model import build
-from repro.serve.engine import Engine, ServeConfig
+from repro.serve.cache import SlotKVPool
+from repro.serve.engine import Engine, PlanDecider, ServeConfig
+from repro.serve.scheduler import (Request, RequestState, Scheduler,
+                                   summarize)
 
 
 @pytest.fixture(scope="module")
@@ -17,7 +23,8 @@ def engine():
     # paths is exact in f32 (bf16 leaves argmax ties to op order)
     params = model.init(jax.random.PRNGKey(0), dtype=jnp.float32)
     return cfg, Engine(model, params,
-                       serve_cfg=ServeConfig(max_len=64, temperature=0.0))
+                       serve_cfg=ServeConfig(max_len=64, temperature=0.0,
+                                             max_slots=3))
 
 
 def test_generate_shapes(engine):
@@ -52,3 +59,240 @@ def test_generate_matches_teacher_forced_forward(engine):
         nxt = jnp.argmax(logits[:, -1].astype(jnp.float32), -1)
         assert int(nxt[0]) == int(out[0, t])
         toks = jnp.concatenate([toks, nxt[:, None].astype(jnp.int32)], axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Scheduler invariants (pure host logic, no jax)
+# ---------------------------------------------------------------------------
+
+
+def _req(rid, arrival=0.0, gen=4, plen=4):
+    return Request(rid=rid, prompt=np.arange(1, plen + 1, dtype=np.int32),
+                   max_new_tokens=gen, arrival_s=arrival)
+
+
+def test_scheduler_fifo_and_lifecycle():
+    sched = Scheduler()
+    for i, t in enumerate([0.3, 0.0, 0.1]):
+        sched.submit(_req(i, arrival=t))
+    sched.sort_queue()
+    # not yet arrived
+    assert not sched.has_ready(-1.0)
+    # arrival order, not submit order
+    order = []
+    while sched.has_ready(1.0):
+        r = sched.pop_ready(1.0)
+        assert r.state is RequestState.PREFILL
+        order.append(r.rid)
+    assert order == [1, 2, 0]
+
+
+def test_scheduler_bind_complete_invariants():
+    sched = Scheduler()
+    for i in range(3):
+        sched.submit(_req(i))
+    a = sched.pop_ready(0.0)
+    b = sched.pop_ready(0.0)
+    sched.bind(a, 0, 0.0)
+    with pytest.raises(ValueError):        # no double-binding a slot
+        sched.bind(b, 0, 0.0)
+    sched.bind(b, 1, 0.0)
+    assert not sched.done()
+    sched.complete(a, 1.0)
+    assert a.state is RequestState.DONE and a.slot is None
+    with pytest.raises(ValueError):        # no double-complete
+        sched.complete(a, 1.0)
+    sched.complete(b, 1.0)
+    assert not sched.done()                # one request still waiting
+    c = sched.pop_ready(0.0)
+    sched.bind(c, 0, 2.0)
+    sched.complete(c, 3.0)
+    assert sched.done()
+    assert {r.rid for r in sched.finished} == {0, 1, 2}
+
+
+def test_slot_pool_alloc_free_write():
+    avals = {"k": jax.ShapeDtypeStruct((1, 4, 2), jnp.float32),
+             "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+    pool = SlotKVPool(avals, n_slots=2)
+    s0, s1 = pool.alloc(), pool.alloc()
+    assert {s0, s1} == {0, 1}
+    assert pool.alloc() is None            # exhausted
+    cache = {"k": jnp.full((1, 4, 2), 7.0), "pos": jnp.asarray(5, jnp.int32)}
+    pool.write(s1, cache)
+    assert int(pool.pool["pos"][s1]) == 5
+    assert float(pool.pool["k"][s1].sum()) == 7.0 * 8
+    assert int(pool.pool["pos"][s0]) == 0  # neighbour slot untouched
+    pool.free(s0)
+    with pytest.raises(ValueError):        # double free
+        pool.free(s0)
+    with pytest.raises(ValueError):        # write to unallocated slot
+        pool.write(s0, cache)
+    assert pool.alloc() == s0              # freed slot is reusable
+    assert pool.n_free == 0 and pool.n_active == 2
+
+
+# ---------------------------------------------------------------------------
+# Continuous batching vs. the static lockstep path
+# ---------------------------------------------------------------------------
+
+
+def test_continuous_matches_static_burst(engine):
+    """Greedy tokens per request identical to lockstep generate (f32)."""
+    cfg, eng = engine
+    prompts = jax.random.randint(jax.random.PRNGKey(4), (3, 12), 0,
+                                 cfg.vocab_size, dtype=jnp.int32)
+    static = np.asarray(eng.generate(prompts, 6)["tokens"])
+    reqs = [Request(rid=i, prompt=np.asarray(prompts[i]), max_new_tokens=6)
+            for i in range(3)]
+    res = eng.serve(reqs)
+    for i, r in enumerate(reqs):
+        assert r.out_tokens == static[i].tolist()
+        assert r.state is RequestState.DONE
+    assert res["stats"]["tokens"] == 18
+    assert eng._pool.n_free == eng.cfg.max_slots   # no slot leaks
+
+
+def test_continuous_matches_static_staggered(engine):
+    """More requests than slots, mixed budgets, staggered arrivals: requests
+    join the decode batch mid-flight and still reproduce lockstep tokens."""
+    cfg, eng = engine
+    prompts = jax.random.randint(jax.random.PRNGKey(5), (5, 10), 0,
+                                 cfg.vocab_size, dtype=jnp.int32)
+    gens = [7, 3, 5, 2, 6]
+    static = np.asarray(eng.generate(prompts, max(gens))["tokens"])
+    reqs = [Request(rid=i, prompt=np.asarray(prompts[i]), max_new_tokens=g,
+                    arrival_s=0.005 * i)
+            for i, g in enumerate(gens)]
+    res = eng.serve(reqs)
+    for i, r in enumerate(reqs):
+        assert r.out_tokens == static[i][:gens[i]].tolist(), f"req {i}"
+    # in-flight batching never takes more pool steps than serial decode
+    # would (equality only if requests never overlapped on a fast machine)
+    assert res["steps"] <= sum(gens)
+    assert eng._pool.n_free == eng.cfg.max_slots
+
+
+def test_continuous_bucketed_prefill_matches_exact(engine):
+    """Pad-to-bucket prefill (warm jit across prompt lengths) is lossless
+    for full-KV caches: pad K/V entries are masked then overwritten."""
+    cfg, eng = engine
+    eng_b = Engine(eng.model, eng.params, serve_cfg=ServeConfig(
+        max_len=64, max_slots=2, prefill_bucket=8))
+    prompts = jax.random.randint(jax.random.PRNGKey(6), (3, 13), 0,
+                                 cfg.vocab_size, dtype=jnp.int32)
+    static = np.asarray(eng.generate(prompts, 5)["tokens"])
+    reqs = [Request(rid=i, prompt=np.asarray(prompts[i]), max_new_tokens=5)
+            for i in range(3)]
+    eng_b.serve(reqs)
+    for i, r in enumerate(reqs):
+        assert r.out_tokens == static[i].tolist()
+    # 13-token prompts feed 12 tokens -> one 16-wide bucket, one jit entry
+    assert list(eng_b._slot_prefills) == [16]
+
+
+def test_continuous_eos_stops_early(engine):
+    """A request whose eos_id matches a generated token stops at it."""
+    cfg, eng = engine
+    prompts = jax.random.randint(jax.random.PRNGKey(7), (1, 8), 0,
+                                 cfg.vocab_size, dtype=jnp.int32)
+    static = np.asarray(eng.generate(prompts, 6)["tokens"])[0]
+    eos = int(static[2])
+    req = Request(rid=0, prompt=np.asarray(prompts[0]), max_new_tokens=6,
+                  eos_id=eos)
+    eng.serve([req])
+    stop = static.tolist().index(eos)
+    assert req.out_tokens == static[: stop + 1].tolist()
+    assert req.out_tokens[-1] == eos
+
+
+def test_serve_summary_stats(engine):
+    cfg, eng = engine
+    prompts = jax.random.randint(jax.random.PRNGKey(8), (2, 6), 0,
+                                 cfg.vocab_size, dtype=jnp.int32)
+    reqs = [Request(rid=i, prompt=np.asarray(prompts[i]), max_new_tokens=3)
+            for i in range(2)]
+    eng.serve(reqs)
+    s = summarize(reqs)
+    assert s["n_done"] == 2 and s["tokens"] == 6
+    assert s["tok_per_s"] > 0
+    assert s["latency_p99_s"] >= s["latency_p50_s"] >= 0
+
+
+# ---------------------------------------------------------------------------
+# Counter-driven plan selection (the paper loop at serve time)
+# ---------------------------------------------------------------------------
+
+
+class _RC:
+    """RegionCounters stand-in."""
+    def __init__(self, regions):
+        self.regions = regions
+
+    def top_regions(self, key, n):
+        items = [(r, getattr(c, key)) for r, c in self.regions.items()]
+        return sorted(items, key=lambda kv: -kv[1])[:n]
+
+
+def _tree(rule):
+    """Train a real DecisionTree on a separable synthetic corpus."""
+    from repro.core.dtree import DecisionTree, features
+    rng = np.random.default_rng(0)
+    X, y = [], []
+    for _ in range(40):
+        ai = rng.uniform(0.5, 200)
+        c = Counters(flops=ai * 1e9, bytes=1e9)
+        X.append(features(c))
+        y.append(rule(ai))
+    return DecisionTree(max_depth=3).fit(np.stack(X), y)
+
+
+def test_plan_decider_applies_predicted_candidate():
+    # low arithmetic intensity -> chunk the q blocks; high -> keep default
+    tree = _tree(lambda ai: "attn_blockq_1k" if ai < 20 else "keep_default")
+    rc = _RC({
+        "layer0/attn": Counters(flops=5e9, bytes=1e9),    # AI 5: wants 1k
+        "layer0/mlp": Counters(flops=4e9, bytes=1e7),
+    })
+    from repro.core.policy import null_plan
+    plan, decisions = PlanDecider(tree).decide(rc, null_plan(), top_n=2)
+    assert plan.config_for("layer3/attn").block_q == 1024
+    assert dict(decisions)["layer/attn"] == "attn_blockq_1k"
+    # prediction for mlp exists but no mlp-applicable candidate matched
+    assert plan.config_for("layer3/mlp").block_q == 0
+
+
+def test_plan_decider_load_scaling_changes_decision():
+    """Occupancy scaling moves the feature past the tree's split."""
+    tree = _tree(lambda ai: "keep_default" if ai < 20 else "attn_blockq_1k")
+    # tree splits on a log-flops-ish boundary: scale flops via load_frac
+    rc = _RC({"layer0/attn": Counters(flops=40e9, bytes=1e9)})   # AI 40
+    from repro.core.policy import null_plan
+    full, _ = PlanDecider(tree).decide(rc, null_plan(), load_frac=1.0)
+    assert full.config_for("layer0/attn").block_q == 1024
+    # at 1/8 occupancy the scaled counters look memory-ish -> keep default
+    low, _ = PlanDecider(tree).decide(rc, null_plan(), load_frac=0.125)
+    assert low.config_for("layer0/attn").block_q == 0
+
+
+def test_serve_with_dtree_selects_and_stays_correct(engine):
+    """End to end: a tree that always votes attn_blockq_1k changes the plan
+    for the decode step, and greedy outputs still match the static path."""
+    cfg, eng = engine
+    from repro.core.dtree import DecisionTree, features
+    X = np.stack([features(Counters(flops=1e9, bytes=1e9)),
+                  features(Counters(flops=1e12, bytes=1e10))])
+    tree = DecisionTree().fit(X, ["attn_blockq_1k", "attn_blockq_1k"])
+    eng_d = Engine(eng.model, eng.params, dtree=tree,
+                   serve_cfg=ServeConfig(max_len=64, max_slots=2))
+    prompts = jax.random.randint(jax.random.PRNGKey(9), (2, 9), 0,
+                                 cfg.vocab_size, dtype=jnp.int32)
+    static = np.asarray(eng.generate(prompts, 4)["tokens"])
+    reqs = [Request(rid=i, prompt=np.asarray(prompts[i]), max_new_tokens=4)
+            for i in range(2)]
+    res = eng_d.serve(reqs)
+    assert res["decisions"], "dtree was never consulted"
+    picked = dict(res["decisions"][0][1])
+    assert picked.get("layer/attn") == "attn_blockq_1k"
+    for i, r in enumerate(reqs):
+        assert r.out_tokens == static[i].tolist()

@@ -58,6 +58,88 @@ def test_canonical():
     assert canonical("enc3") == "enc"
 
 
+def _mem_bound_roofline(rc):
+    return Roofline(compute_s=rc.total.flops / 1e18,
+                    memory_s=rc.total.bytes / 819e9, collective_s=0.0)
+
+
+def test_autotune_rejects_below_min_gain():
+    """An improvement smaller than min_gain is recorded but not accepted,
+    and the loop stops instead of churning."""
+    calls = []
+
+    def evaluate(plan: RegionPlan):
+        # block_q=1024 shaves only 1% off the bytes: real but below the bar
+        frac = 0.99 if plan.config_for("layer0/attn").block_q == 1024 else 1.0
+        regions = {"layer0/attn": Counters(flops=1e12, bytes=8e12 * frac),
+                   "layer0/mlp": Counters(flops=1e12, bytes=1e11)}
+        rc = FakeRC(regions)
+        calls.append(frac)
+        return _mem_bound_roofline(rc).bound_s, rc, _mem_bound_roofline(rc)
+
+    cands = [Candidate("attn_blockq_1k", RegionConfig(block_q=1024), "attn")]
+    res = autotune(None, None, kind="train", candidates=cands,
+                   evaluate=evaluate, max_iters=5, min_gain=0.02,
+                   verbose=False)
+    assert res.history and not any(h.accepted for h in res.history)
+    assert all(h.confirmed for h in res.history)       # it *was* faster...
+    assert res.best_bound_s == res.baseline_bound_s    # ...but not kept
+    assert res.plan.config_for("layer0/attn").block_q == 0
+    # a sub-threshold improvement still teaches the corpus the better class
+    assert res.corpus and res.corpus[0][1] == "attn_blockq_1k"
+
+
+def test_autotune_tried_set_exhausts_without_repeats():
+    """Each (region, candidate) pair is evaluated at most once; when the
+    dominant region is exhausted the loop moves to the next-hottest one."""
+    evals = []
+
+    def evaluate(plan: RegionPlan):
+        enc = 2e12 if plan.config_for("enc/attn").block_q == 1024 else 8e12
+        dec = 1e12 if plan.config_for("dec/attn").block_q == 1024 else 4e12
+        regions = {"enc/attn": Counters(flops=1e12, bytes=enc),
+                   "dec/attn": Counters(flops=1e12, bytes=dec)}
+        rc = FakeRC(regions)
+        evals.append((enc, dec))
+        return _mem_bound_roofline(rc).bound_s, rc, _mem_bound_roofline(rc)
+
+    cands = [
+        Candidate("attn_blockq_1k", RegionConfig(block_q=1024), "attn"),
+        Candidate("attn_blockq_4k", RegionConfig(block_q=4096), "attn"),
+    ]
+    res = autotune(None, None, kind="train", candidates=cands,
+                   evaluate=evaluate, max_iters=10, verbose=False)
+    # both regions tuned, loop terminated on its own before max_iters
+    assert res.plan.config_for("enc/attn").block_q == 1024
+    assert res.plan.config_for("dec/attn").block_q == 1024
+    tried = [(h.region, h.candidate) for h in res.history]
+    assert len(tried) == len(set(tried)), "a pair was re-evaluated"
+    assert len(tried) == 4                    # 2 candidates x 2 regions
+    assert len(evals) == 1 + 4                # baseline + one eval per pair
+    assert len(res.corpus) == 2 and {c for _, c in res.corpus} == {
+        "attn_blockq_1k"}
+
+
+def test_autotune_corpus_feeds_dtree():
+    """The emitted (features, class) corpus trains a usable tree; a corpus
+    of fewer than two samples yields None."""
+    res = autotune(None, None, kind="train", candidates=[
+        Candidate("attn_blockq_1k", RegionConfig(block_q=1024), "attn"),
+        Candidate("attn_blockq_4k", RegionConfig(block_q=4096), "attn"),
+    ], evaluate=fake_evaluator(), max_iters=4, verbose=False)
+    assert len(res.corpus) >= 1
+    empty = TuneResult(plan=RegionPlan(), best_bound_s=0.0,
+                       baseline_bound_s=0.0, history=[], corpus=res.corpus[:1])
+    assert empty.train_dtree() is None
+    doubled = TuneResult(plan=RegionPlan(), best_bound_s=0.0,
+                         baseline_bound_s=0.0, history=[],
+                         corpus=res.corpus * 2)
+    tree = doubled.train_dtree()
+    assert tree is not None
+    X = np.stack([f for f, _ in doubled.corpus])
+    assert set(tree.predict(X)) <= set(c for _, c in doubled.corpus)
+
+
 def test_dtree_learns_separable_rule():
     rng = np.random.default_rng(0)
     X, y = [], []
