@@ -1,16 +1,26 @@
-"""Continuous vs. static batching under staggered arrivals (serving-side
-payoff of the per-region machinery: one fixed-shape decode step over a slot
-pool vs. lockstep groups).
+"""Serving benchmark: paged pool + chunked prefill vs the slot pool vs
+static lockstep batching, under staggered mixed-length arrivals.
 
-Trace: requests arrive staggered with mixed generation lengths.  Static
-batching pads every group to its longest request and admits nothing until
-the group finishes; continuous batching frees each slot the moment its
-request completes and backfills from the queue.  Both paths are compiled
-and warmed before timing, and replay the identical trace.
+Trace: requests arrive staggered with strongly mixed generation lengths
+(mostly short, a long tail) — the workload whole-cache slots handle worst:
+static batching pads every group to its longest request, and the slot pool
+reserves ``max_len`` of HBM per slot no matter how short the request.  The
+paged pool reserves only each request's own worst case (block granularity
+``page_size``) and splits prompts into chunks interleaved with decode
+steps.  All paths are compiled and warmed before timing and replay the
+identical trace.
 
-Row format: ``name,us_per_token,tok_per_s``.
+Row format: ``name,us_per_token,tok_per_s`` (plus derived ratio rows).
+After a run, :data:`json_summary` holds the machine-readable record
+(tok/s, latency percentiles, HBM high-water, in-flight capacity at fixed
+HBM) that ``benchmarks/run.py`` — or ``--smoke`` / ``__main__`` here —
+writes to ``BENCH_serve.json`` so the perf trajectory is tracked across
+PRs.
 """
 from __future__ import annotations
+
+import json
+import sys
 
 import numpy as np
 
@@ -19,23 +29,29 @@ import jax
 from repro.configs.registry import get_config
 from repro.launch.serve import run_static
 from repro.models.model import build
+from repro.serve.cache import PageAllocator, PagedKVPool, pages_for
 from repro.serve.engine import Engine, ServeConfig
 from repro.serve.scheduler import Request
 
 ARCH = "stablelm-1.6b"
 SLOTS = 4
 PROMPT = 16
+PAGE = 8
+CHUNK = 8
 N_REQ = 8
-GENS = [24, 4, 6, 4, 24, 6, 4, 4]      # mixed lengths: padding hurts static
+GENS = [48, 4, 6, 4, 24, 6, 4, 4]      # mixed lengths: padding hurts static,
+                                       # worst-case slots hurt the pool
 GAP_S = 0.01
 
+json_summary: dict = {}
 
-def _trace(vocab: int) -> list[Request]:
+
+def _trace(vocab: int, n_req: int = N_REQ) -> list[Request]:
     rng = np.random.default_rng(0)
     return [Request(rid=i,
                     prompt=rng.integers(0, vocab, PROMPT).astype(np.int32),
-                    max_new_tokens=GENS[i], arrival_s=GAP_S * i)
-            for i in range(N_REQ)]
+                    max_new_tokens=GENS[i % len(GENS)], arrival_s=GAP_S * i)
+            for i in range(n_req)]
 
 
 def _reset(reqs: list[Request]) -> list[Request]:
@@ -44,33 +60,122 @@ def _reset(reqs: list[Request]) -> list[Request]:
             for r in reqs]
 
 
-def run():
+def _inflight_at_fixed_hbm(paged_pool: PagedKVPool, slot_hbm: int,
+                           reqs: list[Request]) -> tuple[int, int]:
+    """How many concurrent requests fit at the slot pool's HBM budget:
+    whole-cache slots vs a same-byte page pool.  Pure allocator
+    bookkeeping — no device arrays — and the demand stream cycles the
+    trace several times over so the paged count saturates on *memory*,
+    not on how many requests the trace happens to contain."""
+    page_b = paged_pool.page_bytes()
+    n_pages = max(int(slot_hbm // page_b), 1) + 1          # + null page
+    sim = PageAllocator(n_pages)
+    admitted = 0
+    demands = [r.prompt.size - 1 + r.max_new_tokens for r in reqs] * 4
+    for i, need in enumerate(demands):
+        n = pages_for(need, paged_pool.page_size)
+        if n <= paged_pool.max_pages_per_slot and sim.alloc(i, n) is not None:
+            admitted += 1
+    return SLOTS, admitted
+
+
+def run(smoke: bool = False):
+    global json_summary
+    n_req = 4 if smoke else N_REQ
     cfg = get_config(ARCH).reduced()
     model = build(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    engine = Engine(model, params, serve_cfg=ServeConfig(
-        max_len=PROMPT + max(GENS) + 1, max_slots=SLOTS, prefill_bucket=8))
-    base = _trace(cfg.vocab_size)
+    max_len = PROMPT + max(GENS) + 1
+    paged_eng = Engine(model, params, serve_cfg=ServeConfig(
+        max_len=max_len, max_slots=SLOTS, page_size=PAGE,
+        prefill_chunk=CHUNK))
+    slot_eng = Engine(model, params, serve_cfg=ServeConfig(
+        max_len=max_len, max_slots=SLOTS, prefill_bucket=8, paged="off"))
+    base = _trace(cfg.vocab_size, n_req)
 
-    # warm both paths (compiles prefill buckets, pool step, static shapes)
-    engine.serve(_reset(base))
-    run_static(engine, _reset(base), SLOTS)
+    # warm every path (compiles chunk fns, pool steps, static shapes)
+    paged_eng.serve(_reset(base))
+    if not smoke:
+        slot_eng.serve(_reset(base))
+        run_static(slot_eng, _reset(base), SLOTS)
 
-    res = engine.serve(_reset(base))
-    s = res["stats"]
-    cont_tok_s = s["tok_per_s"]
-    yield (f"serve_continuous,{1e6 / max(cont_tok_s, 1e-9):.1f},"
-           f"{cont_tok_s:.1f}")
-    yield (f"serve_continuous_p99_ms,{s['latency_p99_s']*1e3:.1f},"
-           f"p50={s['latency_p50_s']*1e3:.1f}ms")
+    paged_eng._pool.reset_high_water()     # don't count warm-up admission
+    res_p = paged_eng.serve(_reset(base))
+    sp = res_p["stats"]
+    paged_tok_s = sp["tok_per_s"]
+    yield (f"serve_paged,{1e6 / max(paged_tok_s, 1e-9):.1f},"
+           f"{paged_tok_s:.1f}")
+    yield (f"serve_paged_p99_ms,{sp['latency_p99_s']*1e3:.1f},"
+           f"p50={sp['latency_p50_s']*1e3:.1f}ms")
 
-    static_tok_s = run_static(engine, _reset(base), SLOTS)["stats"]["tok_per_s"]
-    yield (f"serve_static,{1e6 / max(static_tok_s, 1e-9):.1f},"
-           f"{static_tok_s:.1f}")
-    yield (f"serve_speedup,{cont_tok_s / max(static_tok_s, 1e-9):.2f},"
+    pool = paged_eng._pool
+    yield (f"serve_paged_hbm_mib,{pool.hbm_bytes()/2**20:.2f},"
+           f"high_water={pool.high_water_bytes()/2**20:.2f}")
+
+    json_summary = {
+        "arch": ARCH, "slots": SLOTS, "page_size": PAGE,
+        "prefill_chunk": CHUNK, "n_requests": n_req, "smoke": smoke,
+        "paged": {
+            "tok_per_s": paged_tok_s,
+            "latency_p50_s": sp["latency_p50_s"],
+            "latency_p99_s": sp["latency_p99_s"],
+            "ttft_p50_s": sp["ttft_p50_s"],
+            "hbm_bytes": pool.hbm_bytes(),
+            "hbm_high_water_bytes": pool.high_water_bytes(),
+            "pool_steps": res_p["steps"],
+        },
+    }
+    if smoke:
+        return
+
+    res_s = slot_eng.serve(_reset(base))
+    ss = res_s["stats"]
+    slot_tok_s = ss["tok_per_s"]
+    slot_hbm = slot_eng._pool.hbm_bytes()
+    yield f"serve_slot,{1e6 / max(slot_tok_s, 1e-9):.1f},{slot_tok_s:.1f}"
+    yield f"serve_slot_hbm_mib,{slot_hbm/2**20:.2f},whole_cache_slots"
+
+    static_tok_s = run_static(slot_eng, _reset(base),
+                              SLOTS)["stats"]["tok_per_s"]
+    yield f"serve_static,{1e6 / max(static_tok_s, 1e-9):.1f},{static_tok_s:.1f}"
+
+    slot_cap, paged_cap = _inflight_at_fixed_hbm(pool, slot_hbm, base)
+    yield (f"serve_paged_vs_slot,{paged_tok_s / max(slot_tok_s, 1e-9):.2f},"
+           f"tok_s_ratio")
+    yield (f"serve_inflight_at_fixed_hbm,{paged_cap / slot_cap:.2f},"
+           f"paged={paged_cap}_slot={slot_cap}")
+    yield (f"serve_speedup,{paged_tok_s / max(static_tok_s, 1e-9):.2f},"
            f"continuous_over_static")
+
+    json_summary.update({
+        "slot": {
+            "tok_per_s": slot_tok_s,
+            "latency_p50_s": ss["latency_p50_s"],
+            "latency_p99_s": ss["latency_p99_s"],
+            "hbm_bytes": slot_hbm,
+        },
+        "static": {"tok_per_s": static_tok_s},
+        "ratios": {
+            "paged_vs_slot_tok_s": paged_tok_s / max(slot_tok_s, 1e-9),
+            "inflight_at_fixed_hbm": paged_cap / slot_cap,
+            "continuous_vs_static_tok_s":
+                paged_tok_s / max(static_tok_s, 1e-9),
+        },
+        "inflight_at_fixed_hbm": {"paged": paged_cap, "slot": slot_cap},
+    })
+
+
+def write_json(path: str = "BENCH_serve.json") -> None:
+    with open(path, "w") as f:
+        json.dump(json_summary, f, indent=2)
+        f.write("\n")
 
 
 if __name__ == "__main__":
-    for row in run():
+    smoke = "--smoke" in sys.argv
+    for row in run(smoke=smoke):
         print(row)
+    write_json()
+    print(f"# wrote BENCH_serve.json (smoke={smoke})")
+    if smoke:
+        assert json_summary["paged"]["tok_per_s"] > 0, "smoke run produced 0 tok/s"

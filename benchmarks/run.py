@@ -4,12 +4,16 @@
   bench_smt_models  -> Figs 1-4 (applications vs SMT mode)
   bench_autotune    -> §4.2 (per-region tuning vs single global knob)
   bench_kernels     -> kernel block tuning curve (VMEM occupancy model)
-  bench_serve       -> continuous vs static batching under staggered load
+  bench_serve       -> paged vs slot vs static batching under staggered load
 
-Prints ``name,us_per_call,derived`` CSV rows.
+Prints ``name,us_per_call,derived`` CSV rows.  Modules that populate a
+``json_summary`` dict additionally get it written to ``BENCH_<name>.json``
+(machine-readable: tok/s, latency percentiles, HBM high-water) so the perf
+trajectory is tracked across PRs.
 """
 from __future__ import annotations
 
+import json
 import sys
 import time
 
@@ -32,6 +36,13 @@ def main() -> None:
         try:
             for row in mod.run():
                 print(row, flush=True)
+            summary = getattr(mod, "json_summary", None)
+            if summary:
+                path = f"BENCH_{name}.json"
+                with open(path, "w") as f:
+                    json.dump(summary, f, indent=2)
+                    f.write("\n")
+                print(f"# wrote {path}", flush=True)
         except Exception as e:  # keep the harness robust
             print(f"{name}_FAILED,NaN,{type(e).__name__}: {str(e)[:80]}")
         print(f"# {name} finished in {time.time()-t0:.1f}s", flush=True)

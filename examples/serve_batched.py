@@ -2,8 +2,10 @@
 families (dense GQA, sliding-window, attention-free RNN) through one Engine
 API — each family gets a different cache layout automatically — then the
 same dense model served with continuous batching: staggered arrivals and
-mixed generation lengths share one fixed-shape decode step over a slot
-pool, with requests joining mid-flight as others finish.
+mixed generation lengths share one fixed-shape decode step over a paged
+KV pool (block tables into a global page pool; prompts prefill in chunks
+interleaved with decode steps), with requests joining mid-flight as
+others finish.
 
   PYTHONPATH=src python examples/serve_batched.py
 """
@@ -38,7 +40,7 @@ for arch in ("qwen3-8b", "h2o-danube-1.8b", "rwkv6-3b"):
           f"prefill {out['prefill_s']*1e3:6.1f} ms  "
           f"decode {out['decode_tok_per_s']:7.0f} tok/s")
 
-# -- continuous batching: slot pool + in-flight admission --------------------
+# -- continuous batching: paged KV pool + in-flight admission ----------------
 cfg = get_config("qwen3-8b").reduced()
 model = build(cfg)
 params = model.init(jax.random.PRNGKey(0))

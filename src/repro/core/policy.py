@@ -109,6 +109,9 @@ class RegionConfig:
     moe_group: int = 0      # MoE dispatch group size (0 = impl default)
     moe_impl: str = ""      # '' = default ('einsum'), or 'scatter'
     ssm_impl: str = ""      # '' = default ('scan'), or 'chunked' (matmul SSD)
+    page_size: int = 0      # paged-KV block granularity, tokens (0 = default)
+    attn_impl: str = ""     # decode attention: '' = gather, 'paged' = Pallas
+                            # paged-attention kernel (block_k = its KV tile)
 
     def to_json(self):
         return dataclasses.asdict(self)

@@ -81,6 +81,14 @@ def default_candidates(kind: str = "train") -> list[Candidate]:
                 rules={"kv_seq": "model", "heads": None}), "attn"),
             Candidate("kv_head_shard", RegionConfig(
                 rules={"kv_seq": None, "kv_heads": "model"}), "attn"),
+            # paged-KV layout granularity (pool rebuild) and the paged
+            # Pallas kernel's inner KV tile (step rebuild only)
+            Candidate("attn_page16", RegionConfig(page_size=16), "attn"),
+            Candidate("attn_page64", RegionConfig(page_size=64), "attn"),
+            Candidate("attn_paged_kernel", RegionConfig(attn_impl="paged"),
+                      "attn"),
+            Candidate("attn_paged_kernel_bk128", RegionConfig(
+                attn_impl="paged", block_k=128), "attn"),
         ]
     return cands
 

@@ -11,6 +11,7 @@ import jax.numpy as jnp
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.linear_scan import ssd_kernel, wkv_kernel
+from repro.kernels.paged_attention import paged_attention as _paged
 from repro.kernels.tuned_matmul import tuned_matmul
 
 ON_TPU = any(d.platform == "tpu" for d in jax.devices())
@@ -28,6 +29,13 @@ def attention(q, k, v, *, causal=True, window=0, block_q=128, block_k=128):
     out = _flash(fold(q), fold(k), fold(v), causal=causal, window=window,
                  bq=block_q, bk=block_k, interpret=INTERPRET)
     return out.reshape(B, H, S, D).transpose(0, 2, 1, 3)
+
+
+def paged_attention(q, k_pages, v_pages, block_tables, lengths, *,
+                    block_k=0):
+    """Paged decode attention, already in kernel layout (B, KVH, G, HD)."""
+    return _paged(q, k_pages, v_pages, block_tables, lengths,
+                  block_k=block_k, interpret=INTERPRET)
 
 
 def wkv(r, k, v, w, u, s0, *, bt=256):

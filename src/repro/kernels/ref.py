@@ -28,6 +28,28 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0):
     return jnp.einsum("bhqk,bkhe->bqhe", p, v.astype(jnp.float32))
 
 
+def paged_attention(q, k_pages, v_pages, block_tables, lengths):
+    """Paged decode oracle. q: (B, KVH, G, HD); pages: (P, ps, KVH, HD);
+    block_tables: (B, MP) int32; lengths: (B,) int32 -> (B, KVH, G, HD).
+
+    Gathers every sequence's pages dense, masks positions >= length, and
+    runs plain grouped-GQA softmax attention for the single query token.
+    """
+    B, KVH, G, D = q.shape
+    ps = k_pages.shape[1]
+    k = k_pages[block_tables]                  # (B, MP, ps, KVH, HD)
+    v = v_pages[block_tables]
+    T = k.shape[1] * ps
+    k = k.reshape(B, T, KVH, D)
+    v = v.reshape(B, T, KVH, D)
+    s = jnp.einsum("bhge,bkhe->bhgk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(D)
+    valid = jnp.arange(T)[None, :] < lengths[:, None]
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhgk,bkhe->bhge", p, v.astype(jnp.float32))
+
+
 def wkv_linear_scan(r, k, v, w, u, s0):
     """RWKV6 WKV oracle. r,k,v,w: (B,T,H,N); u: (H,N); s0: (B,H,N,N)."""
     def step(s, inp):

@@ -91,6 +91,16 @@ def main(argv=None):
     ap.add_argument("--slots", type=int, default=4,
                     help="KV pool size / static batch width")
     ap.add_argument("--prefill-bucket", type=int, default=8)
+    ap.add_argument("--paged", choices=("auto", "on", "off"), default="auto",
+                    help="paged KV pool (auto: wherever the family "
+                         "supports it)")
+    ap.add_argument("--page-size", type=int, default=0,
+                    help="tokens per KV page (0 = plan knob, else 16)")
+    ap.add_argument("--kv-pages", type=int, default=0,
+                    help="total KV pages incl. null (0 = per-slot worst "
+                         "case; lower trades HBM for queueing)")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="chunked prefill piece size (0 = whole prompt)")
     ap.add_argument("--max-len", type=int, default=0,
                     help="cache length (default: prompt+gen headroom)")
     ap.add_argument("--temperature", type=float, default=0.0)
@@ -114,7 +124,9 @@ def main(argv=None):
     engine = Engine(model, params, serve_cfg=ServeConfig(
         max_len=max_len, temperature=args.temperature, seed=args.seed,
         max_slots=args.slots, eos_id=args.eos_id,
-        prefill_bucket=args.prefill_bucket), dtree=dtree)
+        prefill_bucket=args.prefill_bucket, paged=args.paged,
+        page_size=args.page_size, kv_pages=args.kv_pages,
+        prefill_chunk=args.prefill_chunk), dtree=dtree)
 
     reqs = build_trace(args, cfg.vocab_size)
     if args.mode == "static":
@@ -134,6 +146,12 @@ def main(argv=None):
           f"{s['wall_s']:.2f} s -> {s['tok_per_s']:.1f} tok/s  "
           f"p50 {s['latency_p50_s']*1e3:.0f} ms  "
           f"p99 {s['latency_p99_s']*1e3:.0f} ms")
+    if args.mode == "continuous" and engine._paged:
+        pool = engine._pool
+        print(f"[paged] page_size={pool.page_size} pages={pool.n_pages} "
+              f"pool={pool.hbm_bytes()/2**20:.1f} MiB "
+              f"high-water={pool.high_water_bytes()/2**20:.1f} MiB "
+              f"({pool.allocator.high_water} pages)")
     return res
 
 

@@ -212,6 +212,163 @@ def apply_attention_decode(cfg, p, x, cache, pos, plan: RegionPlan,
         return plan.constrain(out, rpath, ("batch", "seq", "embed")), new_cache
 
 
+# ---------------------------------------------------------------------------
+# Paged KV cache (block-pool decode + chunked prefill)
+# ---------------------------------------------------------------------------
+
+
+def paged_kv_spec(cfg, n_pages: int, page_size: int, dtype=jnp.bfloat16):
+    """Page-pool shapes for one attention instance: a global block pool
+    instead of per-request whole caches."""
+    kv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    return {
+        "k_pages": jax.ShapeDtypeStruct((n_pages, page_size, kv, hd), dtype),
+        "v_pages": jax.ShapeDtypeStruct((n_pages, page_size, kv, hd), dtype),
+    }
+
+
+def _paged_write(pages, new, block_tables, offsets):
+    """Scatter per-token K or V rows into the page pool.
+
+    pages: (P, ps, KV, HD); new: (N, KV, HD); block_tables: (N, MP) — the
+    owning slot's block-table row per written token; offsets: (N,) absolute
+    token offsets within each token's sequence.  Live slots never share
+    pages (allocator invariant); slots parked on the all-zero block table,
+    and offsets beyond the block table's reach (a padded final prefill
+    chunk overhanging max_len), are routed explicitly to page 0 — the sink.
+    """
+    ps = pages.shape[1]
+    mp = block_tables.shape[1]
+    idx = offsets // ps
+    in_range = idx < mp
+    page_ids = jnp.take_along_axis(block_tables,
+                                   jnp.clip(idx, 0, mp - 1)[:, None],
+                                   axis=1)[:, 0]
+    page_ids = jnp.where(in_range, page_ids, 0)
+    slot_off = jnp.where(in_range, offsets % ps, 0)
+    return pages.at[page_ids, slot_off].set(new.astype(pages.dtype))
+
+
+def _qkv_rope(cfg, p, x, positions):
+    """Shared decode/chunk preamble: project q and the new K/V rows,
+    qk-norm, rope at the given absolute positions."""
+    q = jnp.einsum("bsd,dhe->bshe", x, p["wq"])
+    k_new = jnp.einsum("bsd,dhe->bshe", x, p["wk"])
+    v_new = jnp.einsum("bsd,dhe->bshe", x, p["wv"])
+    if cfg.qk_norm and "q_norm" in p:
+        q = _rms(q, p["q_norm"])
+        k_new = _rms(k_new, p["k_norm"])
+    q = apply_rope(cfg, q, positions)
+    k_new = apply_rope(cfg, k_new, positions)
+    return q, k_new, v_new
+
+
+def _paged_gather(pages, block_table):
+    """(P, ps, KV, HD) gathered through (..., MP) -> (..., MP*ps, KV, HD)."""
+    g = pages[block_table]
+    return g.reshape(g.shape[:-4] + (g.shape[-4] * g.shape[-3],) + g.shape[-2:])
+
+
+def apply_attention_paged_decode(cfg, p, x, pages, block_tables, lengths,
+                                 plan: RegionPlan,
+                                 name: str = "attn") -> tuple[jax.Array, Any]:
+    """One-token decode for every pool slot against the paged KV pool.
+
+    x: (B, 1, D) — B is the slot axis; pages: {"k_pages","v_pages"}:
+    (P, ps, KV, HD); block_tables: (B, MP) int32; lengths: (B,) int32
+    tokens already written per slot (the new token lands at offset
+    ``lengths[b]``, so slots carry independent positions natively — no
+    vmap over single-request caches).
+
+    The attention impl is a region knob: the default gathers each slot's
+    pages dense and runs the grouped-GQA einsum (identical math to the
+    slot path's ``apply_attention_decode``); ``attn_impl='paged'`` calls
+    the Pallas paged-attention kernel, which DMAs K/V page-by-page through
+    the block table with a ``block_k``-sized inner tile.
+    """
+    with region(name) as rpath:
+        B = x.shape[0]
+        positions = lengths[:, None]                        # (B, 1) per-slot
+        q, k_new, v_new = _qkv_rope(cfg, p, x, positions)
+
+        k_pages = _paged_write(pages["k_pages"], k_new[:, 0],
+                               block_tables, lengths)
+        v_pages = _paged_write(pages["v_pages"], v_new[:, 0],
+                               block_tables, lengths)
+        new_pages = {"k_pages": k_pages, "v_pages": v_pages}
+
+        hd = q.shape[-1]
+        kvh, grp = cfg.n_kv_heads, cfg.n_heads // cfg.n_kv_heads
+        qg = q.reshape(B, kvh, grp, hd)
+        rc = plan.config_for(rpath)
+        if rc.attn_impl == "paged":
+            from repro.kernels import ops
+            attn = ops.paged_attention(qg, k_pages, v_pages, block_tables,
+                                       lengths + 1, block_k=rc.block_k)
+            attn = attn.astype(x.dtype)
+        else:
+            k = _paged_gather(k_pages, block_tables)        # (B, T, KV, HD)
+            v = _paged_gather(v_pages, block_tables)
+            T = k.shape[1]
+            # valid: every written position, including this step's token
+            valid = jnp.arange(T, dtype=jnp.int32)[None, :] <= lengths[:, None]
+            s = jnp.einsum("bhge,bkhe->bhgk", qg, k) / math.sqrt(hd)
+            s = plan.constrain(s, rpath,
+                               ("batch", "kv_heads", None, "kv_seq"))
+            s = jnp.where(valid[:, None, None, :],
+                          s.astype(jnp.float32), NEG_INF)
+            probs = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+            attn = jnp.einsum("bhgk,bkhe->bhge", probs, v)
+        attn = attn.reshape(B, 1, cfg.n_heads, hd)
+        out = jnp.einsum("bshe,hed->bsd", attn, p["wo"])
+        return plan.constrain(out, rpath, ("batch", "seq", "embed")), new_pages
+
+
+def apply_attention_paged_chunk(cfg, p, x, pages, block_table, base,
+                                plan: RegionPlan,
+                                name: str = "attn") -> tuple[jax.Array, Any]:
+    """One prefill chunk of a single request against its paged KV range.
+
+    x: (1, C, D) — C prompt tokens starting at absolute position ``base``
+    (scalar int32); the chunk's K/V are written into the request's pages
+    first, then its queries attend causally over everything the request
+    has written so far (earlier chunks + itself), gathered through
+    ``block_table`` (MP,).  Padded tail tokens (the last chunk is padded to
+    the fixed chunk width) write beyond the true length: within the block
+    table's reach they land in the request's own reserved pages (positions
+    a later write always overwrites before any masked-in read); beyond it
+    the write scatter routes them to the null page explicitly.
+    """
+    with region(name) as rpath:
+        C = x.shape[1]
+        positions = base + jnp.arange(C, dtype=jnp.int32)   # (C,) absolute
+        q, k_new, v_new = _qkv_rope(cfg, p, x, positions)
+
+        bt_rows = jnp.broadcast_to(block_table, (C, block_table.shape[0]))
+        k_pages = _paged_write(pages["k_pages"], k_new[0], bt_rows, positions)
+        v_pages = _paged_write(pages["v_pages"], v_new[0], bt_rows, positions)
+        new_pages = {"k_pages": k_pages, "v_pages": v_pages}
+
+        k = _paged_gather(k_pages, block_table[None, :])    # (1, T, KV, HD)
+        v = _paged_gather(v_pages, block_table[None, :])
+        T = k.shape[1]
+        hd = q.shape[-1]
+        kvh, grp = cfg.n_kv_heads, cfg.n_heads // cfg.n_kv_heads
+        qg = q.reshape(1, C, kvh, grp, hd)
+        s = jnp.einsum("bqhge,bkhe->bhgqk", qg, k) / math.sqrt(hd)
+        s = plan.constrain(s, rpath,
+                           ("batch", "kv_heads", None, "seq", "kv_seq"))
+        kpos = jnp.arange(T, dtype=jnp.int32)
+        causal = kpos[None, :] <= positions[:, None]        # (C, T)
+        s = jnp.where(causal[None, None, None, :, :],
+                      s.astype(jnp.float32), NEG_INF)
+        probs = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+        attn = jnp.einsum("bhgqk,bkhe->bqhge", probs, v)
+        attn = attn.reshape(1, C, cfg.n_heads, hd)
+        out = jnp.einsum("bshe,hed->bsd", attn, p["wo"])
+        return plan.constrain(out, rpath, ("batch", "seq", "embed")), new_pages
+
+
 def prefill_kv(cfg, p, x, plan: RegionPlan, max_len: int, name: str = "attn"):
     """Compute K/V for a full prompt and write them into a fresh cache."""
     with region(name + ".fill"):

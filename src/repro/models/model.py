@@ -76,6 +76,33 @@ class Model:
     def cache_spec(self, batch: int, max_len: int, dtype=jnp.bfloat16):
         return self.mod.cache_spec(self.cfg, batch, max_len, dtype)
 
+    # -- paged KV (full-KV attention families only) ------------------------
+    @property
+    def supports_paged(self) -> bool:
+        """Paged KV needs a cache that grows with the sequence and a
+        positional full-KV layout: recurrent state (ssm/hybrid) and
+        sliding-window rings are fixed-size, encdec threads encoder
+        outputs — all stay on the slot pool."""
+        return (hasattr(self.mod, "paged_decode_step")
+                and self.cfg.family in ("dense", "moe", "vlm")
+                and not self.cfg.swa_window)
+
+    def paged_cache_spec(self, n_pages: int, page_size: int,
+                         dtype=jnp.bfloat16):
+        return self.mod.paged_cache_spec(self.cfg, n_pages, page_size, dtype)
+
+    def paged_decode(self, params, pages, tokens, block_tables, lengths,
+                     plan: Optional[RegionPlan] = None):
+        return self.mod.paged_decode_step(self.cfg, params, pages, tokens,
+                                          block_tables, lengths,
+                                          plan or null_plan())
+
+    def paged_prefill_chunk(self, params, pages, tokens, block_table, base,
+                            plan: Optional[RegionPlan] = None):
+        return self.mod.prefill_chunk_step(self.cfg, params, pages, tokens,
+                                           block_table, base,
+                                           plan or null_plan())
+
     def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16):
         return self.mod.init_cache(self.cfg, batch, max_len, dtype)
 

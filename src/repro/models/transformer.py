@@ -106,31 +106,97 @@ def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16) -> Any:
                         cache_spec(cfg, batch, max_len, dtype))
 
 
+def _block_loop(cfg, params, x, plan: RegionPlan, attn_apply,
+                moe_group: str):
+    """Shared per-layer body of every incremental step (decode, paged
+    decode, prefill chunk): norm1 -> attention (``attn_apply(li, lp, h)``
+    returns (attn_out, new_layer_cache)) -> norm2 -> mlp/moe."""
+    from repro.models import moe as moe_mod
+    blocks = params["blocks"]
+    new_layers = {}
+    for li in range(cfg.n_layers):
+        lp = jax.tree.map(lambda a: a[li], blocks)
+        with region(f"layer{li}"):
+            h = L.apply_norm(cfg, lp["norm1"], x)
+            a, nc = attn_apply(li, lp, h)
+            x = x + a
+            h = L.apply_norm(cfg, lp["norm2"], x)
+            if cfg.n_experts:
+                y, _ = moe_mod.apply_moe(cfg, lp["mlp"], h, plan,
+                                         group=moe_group)
+            else:
+                y = L.apply_mlp(cfg, lp["mlp"], h, plan)
+            x = x + y
+        new_layers[f"l{li}"] = nc
+    return x, new_layers
+
+
 def decode_step(cfg, params, cache, tokens, plan: RegionPlan, *,
                 unroll: bool = True):
     """tokens: (B, 1) -> (logits, new_cache)."""
     pos = cache["pos"]
     x = L.apply_embed(cfg, params["embed"], tokens, plan)
-    blocks = params["blocks"]
-    new_layers = {}
-    for li in range(cfg.n_layers):
-        lp = jax.tree.map(lambda a: a[li], blocks)
-        lc = cache["layers"][f"l{li}"]
-        with region(f"layer{li}"):
-            h = L.apply_norm(cfg, lp["norm1"], x)
-            a, nc = attn.apply_attention_decode(cfg, lp["attn"], h, lc, pos, plan)
-            x = x + a
-            h = L.apply_norm(cfg, lp["norm2"], x)
-            if cfg.n_experts:
-                from repro.models import moe as moe_mod
-                y, _ = moe_mod.apply_moe(cfg, lp["mlp"], h, plan, group="flat")
-            else:
-                y = L.apply_mlp(cfg, lp["mlp"], h, plan)
-            x = x + y
-        new_layers[f"l{li}"] = nc
+    x, new_layers = _block_loop(
+        cfg, params, x, plan,
+        lambda li, lp, h: attn.apply_attention_decode(
+            cfg, lp["attn"], h, cache["layers"][f"l{li}"], pos, plan),
+        moe_group="flat")
     x = L.apply_norm(cfg, params["final_norm"], x)
     logits = L.apply_unembed(cfg, params["embed"], x, plan)
     return logits, {"layers": new_layers, "pos": pos + 1}
+
+
+def paged_cache_spec(cfg, n_pages: int, page_size: int,
+                     dtype=jnp.bfloat16) -> Any:
+    """Global page-pool cache: per-layer K/V block pools, no per-request
+    axis — block tables and lengths live on the host (see serve/cache.py)."""
+    one = attn.paged_kv_spec(cfg, n_pages, page_size, dtype)
+    return {"layers": {f"l{i}": one for i in range(cfg.n_layers)}}
+
+
+def paged_decode_step(cfg, params, pages, tokens, block_tables, lengths,
+                      plan: RegionPlan):
+    """One decode step for every pool slot, natively batched over slots.
+
+    tokens: (B, 1); block_tables: (B, MP) int32 (all-zero rows park a slot
+    on the null page); lengths: (B,) int32 tokens already written per slot.
+    Returns (logits (B, 1, V), new_pages).  Each slot carries its own
+    position — the continuous-batching property — without vmapping a
+    single-request cache: the pool IS the batch.
+    """
+    x = L.apply_embed(cfg, params["embed"], tokens, plan)
+    x, new_layers = _block_loop(
+        cfg, params, x, plan,
+        lambda li, lp, h: attn.apply_attention_paged_decode(
+            cfg, lp["attn"], h, pages["layers"][f"l{li}"],
+            block_tables, lengths, plan),
+        moe_group="flat")
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    logits = L.apply_unembed(cfg, params["embed"], x, plan)
+    return logits, {"layers": new_layers}
+
+
+def prefill_chunk_step(cfg, params, pages, tokens, block_table, base,
+                       plan: RegionPlan):
+    """Prefill one chunk of one request's prompt into its pages.
+
+    tokens: (1, C); block_table: (MP,) the request's page ids; base: scalar
+    int32 absolute position of the chunk's first token.  The chunk's K/V
+    are written into the page pool layer by layer and its queries attend
+    causally over positions <= their own (earlier chunks included), so a
+    long prompt splits into fixed-shape pieces the engine interleaves with
+    pool decode steps.  Returns new_pages only — the first generated token
+    comes from feeding the last prompt token through the shared decode
+    step, same as the slot path.
+    """
+    x = L.apply_embed(cfg, params["embed"], tokens, plan)
+    _, new_layers = _block_loop(
+        cfg, params, x, plan,
+        lambda li, lp, h: attn.apply_attention_paged_chunk(
+            cfg, lp["attn"], h, pages["layers"][f"l{li}"],
+            block_table, base, plan),
+        moe_group="seq")
+    return {"layers": new_layers}
 
 
 def prefill(cfg, params, batch, plan: RegionPlan, max_len: int):

@@ -1,20 +1,38 @@
-"""Slot-based KV-cache pool for continuous batching.
+"""KV-cache pools for continuous batching: paged (block) and slot-based.
 
-The pool holds ``n_slots`` independent single-request caches stacked on a
-leading slot axis: each leaf of a per-request cache tree (shape ``(1, ...)``
-for KV leaves, scalar for ``pos``) becomes a pooled leaf of shape
-``(n_slots, 1, ...)`` / ``(n_slots,)``.  The decode step vmaps the model's
-single-request ``decode_step`` over that axis, so every slot carries its own
-sequence position — the property lockstep batching lacks and the one that
-lets requests join/leave the batch mid-flight.
+Two pool layouts back :meth:`repro.serve.engine.Engine.serve`:
 
-Slot lifecycle is explicit: :meth:`alloc` hands out a free slot id,
-:meth:`write` splices a freshly prefilled cache into the pool (jitted, with
-buffer donation, traced once — the slot index is a traced scalar so writes
-to different slots share one executable), and :meth:`free` returns the slot.
-Freed slots keep their stale contents; correctness relies on allocation
-always overwriting via :meth:`write` (or :meth:`empty_slot_cache` for
-promptless requests), never on zeroing.
+* :class:`PagedKVPool` — the default for full-KV attention families.  KV
+  memory is ONE global block pool per layer: ``k_pages``/``v_pages`` of
+  shape ``(n_pages, page_size, KV, HD)``.  A request owns only the pages
+  its sequence actually occupies, recorded in a per-slot *block table*
+  (``(n_slots, max_pages_per_slot)`` int32 page ids, zero-padded).  Token
+  ``t`` of a slot lives at ``(block_table[t // page_size], t % page_size)``.
+  Page 0 is a reserved *null sink*: the allocator never hands it out, freed
+  slots have all-zero block tables, so fixed-shape decode writes for
+  inactive slots land harmlessly in page 0 instead of corrupting a live
+  page.  Admission is reservation-based and preemption-free: a request is
+  admitted only when ``ceil(tokens_needed / page_size)`` pages are free, so
+  decode never hits an out-of-pages fault mid-flight.  Because a short
+  request reserves only its own worst case — not the pool-wide ``max_len``
+  — mixed-length traffic fits far more in-flight requests into the same
+  HBM than whole-cache slots (no internal fragmentation beyond the final
+  partial page).  ``page_size`` is a tunable knob (``RegionConfig
+  .page_size``): small pages waste less tail memory, large pages gather
+  with fewer, bigger DMA blocks in the paged-attention kernel.
+
+  The device state is pages only; block tables and per-slot lengths are
+  host-side numpy (the host is the source of truth for slot composition,
+  exactly like the engine's pending-token vector) and are shipped to the
+  fixed-shape decode step as tiny int32 arrays each step.
+
+* :class:`SlotKVPool` — the original whole-cache layout, kept for families
+  whose per-request state does not grow with the sequence (ssm/hybrid
+  recurrent state, sliding-window rings): ``n_slots`` single-request caches
+  stacked on a leading slot axis, the decode step vmapped over that axis.
+  Slot lifecycle is explicit (:meth:`alloc` / :meth:`write` / :meth:`free`)
+  and freed slots keep stale contents — correctness relies on allocation
+  always overwriting.
 """
 from __future__ import annotations
 
@@ -22,6 +40,200 @@ from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Page allocator (host-side free list, the paged pool's bookkeeping core)
+# ---------------------------------------------------------------------------
+
+
+class PageAllocator:
+    """Free-list allocator over ``n_pages`` fixed-size KV blocks.
+
+    Page 0 is reserved as the null sink and never allocated.  Every live
+    page has exactly one owner; :meth:`free` releases all of an owner's
+    pages at once.  ``alloc`` is all-or-nothing so admission control can
+    reserve a request's worst case atomically; :meth:`append` grows an
+    existing owner one page at a time (used by tests and future lazy
+    allocation).
+    """
+
+    def __init__(self, n_pages: int):
+        if n_pages < 2:
+            raise ValueError("n_pages must be >= 2 (page 0 is the null sink)")
+        self.n_pages = n_pages
+        # pop() from the end -> low page ids first
+        self._free = list(range(n_pages - 1, 0, -1))
+        self._owned: dict[Any, list[int]] = {}
+        self._owner_of: dict[int, Any] = {}
+        self.high_water = 0                     # peak live pages (frag metric)
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_live(self) -> int:
+        return len(self._owner_of)
+
+    def pages_of(self, owner) -> list[int]:
+        return list(self._owned.get(owner, ()))
+
+    def alloc(self, owner, n: int) -> Optional[list[int]]:
+        """Atomically claim ``n`` pages for a new ``owner`` (None if short)."""
+        if owner in self._owned:
+            raise ValueError(f"owner {owner!r} already holds pages")
+        if n < 0:
+            raise ValueError("n must be >= 0")
+        if n > len(self._free):
+            return None
+        pages = [self._free.pop() for _ in range(n)]
+        self._owned[owner] = pages
+        for p in pages:
+            self._owner_of[p] = owner
+        self.high_water = max(self.high_water, self.n_live)
+        return pages
+
+    def append(self, owner) -> Optional[int]:
+        """Grow an existing owner by one page (None when exhausted)."""
+        if owner not in self._owned:
+            raise ValueError(f"owner {owner!r} holds no pages (alloc first)")
+        if not self._free:
+            return None
+        p = self._free.pop()
+        self._owned[owner].append(p)
+        self._owner_of[p] = owner
+        self.high_water = max(self.high_water, self.n_live)
+        return p
+
+    def free(self, owner) -> list[int]:
+        """Release every page held by ``owner`` back to the free list."""
+        if owner not in self._owned:
+            raise ValueError(f"owner {owner!r} holds no pages (double free?)")
+        pages = self._owned.pop(owner)
+        for p in pages:
+            del self._owner_of[p]
+        self._free.extend(reversed(pages))
+        return pages
+
+    def check_invariants(self) -> None:
+        """Free + live partition pages 1..n-1; ownership maps agree."""
+        free = set(self._free)
+        live = set(self._owner_of)
+        assert not (free & live), f"pages both free and live: {free & live}"
+        assert free | live == set(range(1, self.n_pages)), "page leak"
+        assert 0 not in free and 0 not in live, "null page escaped"
+        flat = [p for pages in self._owned.values() for p in pages]
+        assert len(flat) == len(set(flat)), "page owned twice"
+        assert set(flat) == live, "ownership maps disagree"
+
+
+# ---------------------------------------------------------------------------
+# Paged KV pool
+# ---------------------------------------------------------------------------
+
+
+def pages_for(n_tokens: int, page_size: int) -> int:
+    return -(-max(n_tokens, 0) // page_size)
+
+
+class PagedKVPool:
+    """Global KV block pool + per-slot block tables (see module docstring).
+
+    ``pages`` is the device pytree of per-layer page arrays (built by the
+    model's ``paged_cache_spec``); ``block_tables``/``lengths`` are host
+    numpy, updated by :meth:`admit`/:meth:`advance`/:meth:`release`.
+    """
+
+    def __init__(self, pages_avals: Any, n_slots: int, page_size: int,
+                 n_pages: int, max_pages_per_slot: int):
+        if n_slots < 1:
+            raise ValueError("n_slots must be >= 1")
+        if page_size < 1:
+            raise ValueError("page_size must be >= 1")
+        self.n_slots = n_slots
+        self.page_size = page_size
+        self.n_pages = n_pages
+        self.max_pages_per_slot = max_pages_per_slot
+        self.pages = jax.tree.map(
+            lambda s: jnp.zeros(s.shape, s.dtype), pages_avals)
+        self.allocator = PageAllocator(n_pages)
+        self.block_tables = np.zeros((n_slots, max_pages_per_slot), np.int32)
+        self.lengths = np.zeros((n_slots,), np.int32)
+        self._free_slots = list(range(n_slots - 1, -1, -1))
+        self._active: set[int] = set()
+
+    # -- slot accounting -----------------------------------------------------
+    @property
+    def n_free(self) -> int:
+        return len(self._free_slots)
+
+    @property
+    def n_active(self) -> int:
+        return len(self._active)
+
+    def can_admit(self, n_tokens: int) -> bool:
+        n = pages_for(n_tokens, self.page_size)
+        return (bool(self._free_slots) and n <= self.max_pages_per_slot
+                and n <= self.allocator.n_free)
+
+    def admit(self, n_tokens: int) -> Optional[int]:
+        """Reserve a slot plus the request's worst-case pages (atomic)."""
+        if not self.can_admit(n_tokens):
+            return None
+        slot = self._free_slots.pop()
+        pages = self.allocator.alloc(slot, pages_for(n_tokens, self.page_size))
+        self._active.add(slot)
+        self.block_tables[slot] = 0
+        self.block_tables[slot, :len(pages)] = pages
+        self.lengths[slot] = 0
+        return slot
+
+    def release(self, slot: int) -> None:
+        """Free a slot's pages; its block-table row reverts to the null page."""
+        if slot not in self._active:
+            raise ValueError(f"slot {slot} is not active (double free?)")
+        self.allocator.free(slot)
+        self._active.remove(slot)
+        self._free_slots.append(slot)
+        self.block_tables[slot] = 0
+        self.lengths[slot] = 0
+
+    def advance(self, slot: int, n_tokens: int) -> None:
+        """Record ``n_tokens`` newly written tokens for ``slot``."""
+        if slot not in self._active:
+            raise ValueError(f"slot {slot} is not active")
+        new_len = int(self.lengths[slot]) + n_tokens
+        if new_len > self.max_pages_per_slot * self.page_size:
+            raise ValueError(f"slot {slot} overflows its block table "
+                             f"({new_len} tokens)")
+        self.lengths[slot] = new_len
+
+    # -- memory accounting ---------------------------------------------------
+    def page_bytes(self) -> int:
+        """Bytes of one page across all layers (K and V)."""
+        per = [int(np.prod(l.shape[1:])) * l.dtype.itemsize
+               for l in jax.tree.leaves(self.pages)]
+        return int(sum(per))
+
+    def hbm_bytes(self) -> int:
+        """Total pool HBM footprint (all pages, live or free)."""
+        return self.page_bytes() * self.n_pages
+
+    def high_water_bytes(self) -> int:
+        """Peak bytes of *live* pages — the trace's real KV working set."""
+        return self.page_bytes() * self.allocator.high_water
+
+    def reset_high_water(self) -> None:
+        """Restart the peak-live-pages ratchet (e.g. after a warm-up trace
+        whose admission pattern shouldn't count against the measured run)."""
+        self.allocator.high_water = self.allocator.n_live
+
+
+# ---------------------------------------------------------------------------
+# Slot (whole-cache) pool — recurrent/ring families and the legacy layout
+# ---------------------------------------------------------------------------
 
 
 def _splice(pool: Any, cache: Any, slot: jax.Array) -> Any:
@@ -31,7 +243,18 @@ def _splice(pool: Any, cache: Any, slot: jax.Array) -> Any:
 
 
 class SlotKVPool:
-    """Fixed-shape pool of per-request caches with a free-slot list."""
+    """Fixed-shape pool of per-request caches with a free-slot list.
+
+    Each leaf of a per-request cache tree (shape ``(1, ...)`` for KV leaves,
+    scalar for ``pos``) becomes a pooled leaf of shape ``(n_slots, 1, ...)``
+    / ``(n_slots,)``; the decode step vmaps the model's single-request
+    ``decode_step`` over that axis.  :meth:`write` splices a freshly
+    prefilled cache into the pool (jitted, with buffer donation, traced once
+    — the slot index is a traced scalar so writes to different slots share
+    one executable).  Freed slots keep their stale contents; correctness
+    relies on allocation always overwriting via :meth:`write` (or
+    :meth:`empty_slot_cache` for promptless requests), never on zeroing.
+    """
 
     def __init__(self, slot_cache_avals: Any, n_slots: int):
         if n_slots < 1:
@@ -79,3 +302,8 @@ class SlotKVPool:
         """A zeroed single-request cache (pos=0): the pre-prompt state."""
         return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
                             self.slot_avals)
+
+    def hbm_bytes(self) -> int:
+        """Total pool footprint (KV leaves only, the growable part)."""
+        return int(sum(int(np.prod(l.shape)) * l.dtype.itemsize
+                       for l in jax.tree.leaves(self.pool)))

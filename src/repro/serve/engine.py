@@ -7,21 +7,35 @@ Two paths share one Engine:
   Simple, but every row pays for the slowest/longest row and nothing can
   join until the whole batch finishes.
 
-* :meth:`Engine.serve` — continuous batching over a slot-based KV-cache
-  pool (:mod:`repro.serve.cache`).  Requests are admitted FIFO from an
-  arrival trace (:mod:`repro.serve.scheduler`) into free slots; the decode
-  step is ONE fixed-shape jitted function over the whole pool (the model's
-  single-request ``decode_step`` vmapped over the slot axis, cache buffers
-  donated), so jit caches stay warm no matter how batch composition
-  changes — inactive slots simply decode garbage that the host ignores.
-  Per-slot ``pos`` means a request that finishes frees its slot
-  immediately and the next request joins mid-flight, no lockstep barrier.
+* :meth:`Engine.serve` — continuous batching over a KV-cache pool
+  (:mod:`repro.serve.cache`).  Requests are admitted FIFO from an arrival
+  trace (:mod:`repro.serve.scheduler`); the decode step is ONE fixed-shape
+  jitted function over the whole pool, so jit caches stay warm no matter
+  how batch composition changes — inactive slots decode against the null
+  page and their samples are masked.  Per-slot positions mean a request
+  that finishes frees its memory immediately and the next request joins
+  mid-flight, no lockstep barrier.
 
-  Prefill fills one slot at a time: the prompt minus its last token runs
-  through the model's prefill (padded up to ``prefill_bucket`` on families
-  where right-padding is sound, exact-length otherwise), and the last
-  prompt token is fed through the shared decode step — so the first
-  generated token takes the same code path as every later one.
+  Full-KV families run on the **paged pool** (default): KV lives in a
+  global block pool (``page_size`` tokens per page, a tunable knob), each
+  request holds only the pages its sequence occupies via a block table,
+  and admission reserves a request's own worst case — not the pool-wide
+  ``max_len`` — so mixed-length traffic fits far more in-flight requests
+  into the same HBM.  Prompts prefill in ``prefill_chunk``-sized pieces
+  *interleaved* with pool decode steps (at most ``prefill_chunks_per_step``
+  chunks between consecutive steps), so a long prompt no longer stalls
+  every in-flight decode.  The decode attention gathers K/V through the
+  block table — grouped-GQA einsum by default, or the Pallas
+  paged-attention kernel when the plan sets ``attn_impl='paged'`` (its
+  inner KV tile is ``block_k``).
+
+  Families whose per-request state does not grow with the sequence
+  (ssm/hybrid recurrent state, sliding-window rings) keep the **slot
+  pool**: whole caches stacked on a slot axis, the single-request
+  ``decode_step`` vmapped over it, prompts prefilled one slot at a time
+  (padded up to ``prefill_bucket`` where right-padding is sound).  In both
+  pools the last prompt token is fed through the shared decode step, so
+  the first generated token takes the same code path as every later one.
 
 The paper loop runs at serve time: when a :class:`repro.core.dtree
 .DecisionTree` (trained on the autotuner's counter->winning-config corpus)
@@ -53,12 +67,25 @@ class ServeConfig:
     temperature: float = 0.0
     seed: int = 0
     # -- continuous batching -------------------------------------------------
-    max_slots: int = 4          # KV pool size == max in-flight requests
+    max_slots: int = 4          # max in-flight requests (pool width)
     eos_id: int = -1            # -1: no EOS (per-request eos_id overrides)
-    prefill_bucket: int = 0     # 0 = exact-length prefill jits; >0 = pad to
-                                # the bucket where right-padding is sound
+    prefill_bucket: int = 0     # slot path: 0 = exact-length prefill jits;
+                                # >0 = pad to the bucket where right-padding
+                                # is sound
     autoplan: bool = True       # consult the dtree (when one is supplied)
     autoplan_top_n: int = 2     # hot regions consulted per (re)selection
+    # -- paged KV pool -------------------------------------------------------
+    paged: str = "auto"         # "auto": paged wherever the family supports
+                                # it; "on": require it; "off": slot pool
+    page_size: int = 0          # tokens per KV page (0 = the plan's
+                                # attn-region page_size knob, else 16)
+    kv_pages: int = 0           # total pages incl. the null page (0 = the
+                                # per-slot worst case — same HBM as the slot
+                                # pool; set lower to trade HBM for queueing)
+    prefill_chunk: int = 0      # chunked prefill piece size (0 = whole
+                                # prompt in one chunk)
+    prefill_chunks_per_step: int = 1   # prefill chunks interleaved between
+                                       # consecutive pool decode steps
 
 
 def _overlay(base: RegionConfig, cand: RegionConfig) -> RegionConfig:
@@ -142,7 +169,10 @@ class Engine:
 
         # -- continuous-batching state (built lazily by _ensure_pool) --------
         self._pool = None
+        self._paged = False
+        self._build_step = None                     # plan -> compiled step
         self._slot_prefills: dict[int, Any] = {}    # feed_len -> jitted fn
+        self._chunk_step = None                     # paged prefill-chunk fn
         self._pool_steps: dict[tuple, Any] = {}     # decisions -> compiled
         self._pool_step = None
         self._pool_rc = None                        # counters of base step
@@ -208,6 +238,28 @@ class Engine:
                 p, {"tokens": t}, self.plan, max_len=self.cfg.max_len)[1],
             self.params, tok)
 
+    def _param_dtype(self):
+        return jax.tree.leaves(self.params)[0].dtype
+
+    def page_size(self) -> int:
+        """page_size resolution: ServeConfig overrides the plan's attention
+        region knob (the tuner/PlanDecider's channel), which overrides the
+        default.  Consulted once, at pool build — the pool layout cannot
+        change mid-flight (a replan only rebuilds the step)."""
+        rc = self.plan.config_for("layer0/attn")
+        return self.cfg.page_size or rc.page_size or 16
+
+    def _use_paged(self) -> bool:
+        if self.cfg.paged == "off":
+            return False
+        if self.cfg.paged == "on":
+            if not self.model.supports_paged:
+                raise ValueError(
+                    f"paged KV unsupported for family "
+                    f"{self.model.cfg.family!r} (swa={self.model.cfg.swa_window})")
+            return True
+        return self.model.supports_paged
+
     def _ensure_pool(self):
         if self._pool is not None:
             return
@@ -215,37 +267,95 @@ class Engine:
             raise NotImplementedError(
                 "continuous batching supports decoder-only families; "
                 "use generate() for encdec")
-        from repro.serve.cache import SlotKVPool
-        self._pool = SlotKVPool(self._slot_cache_avals(), self.cfg.max_slots)
-        self._pool_step = self._build_pool_step(self.plan)
-        self._pool_steps[()] = self._pool_step
+        from repro.serve.cache import PagedKVPool, SlotKVPool, pages_for
+        self._paged = self._use_paged()
+        if self._paged:
+            ps = self.page_size()
+            max_pages = pages_for(self.cfg.max_len, ps)
+            n_pages = self.cfg.kv_pages or (
+                self.cfg.max_slots * max_pages + 1)
+            avals = self.model.paged_cache_spec(n_pages, ps,
+                                               dtype=self._param_dtype())
+            self._pool = PagedKVPool(avals, self.cfg.max_slots, ps,
+                                     n_pages, max_pages)
+            self._build_step = self._build_paged_step
+        else:
+            self._pool = SlotKVPool(self._slot_cache_avals(),
+                                    self.cfg.max_slots)
+            self._build_step = self._build_pool_step
+        self._pool_step = self._build_step(self.plan)
+        self._pool_steps[self._step_cache_key(self.plan)] = self._pool_step
         if self.dtree is not None and self.cfg.autoplan:
             from repro.core import counters as counters_mod
             self._pool_rc = counters_mod.collect(self._pool_step)
 
+    def _sample_pool(self, logits, active, key, temp):
+        """Shared pool-step sampler with the inactive-slot mask: freed (or
+        mid-prefill) slots decode the null page, so their logits are
+        garbage and may be non-finite — zero them before the sampler so
+        NaNs never propagate into categorical(), and pin their sampled
+        token to 0 so downstream state is occupancy-independent."""
+        logits = jnp.where(active[:, None], logits, 0.0)
+        if temp <= 0:
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        else:
+            keys = jax.random.split(key, logits.shape[0])
+            nxt = jax.vmap(
+                lambda k, l: jax.random.categorical(k, l / temp))(
+                    keys, logits).astype(jnp.int32)
+        return jnp.where(active, nxt, 0)
+
     def _build_pool_step(self, plan: RegionPlan):
         """AOT-compile one decode+sample step over the whole slot pool."""
         model, temp = self.model, self.cfg.temperature
+        sample = self._sample_pool
 
-        def step(params, pool, tokens, key):
+        def step(params, pool, tokens, active, key):
             def one(cache, tok):
                 logits, new_cache = model.decode(params, cache,
                                                  tok[None, None], plan)
                 return logits[0, -1, :].astype(jnp.float32), new_cache
             logits, pool = jax.vmap(one)(pool, tokens)
-            if temp <= 0:
-                nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-            else:
-                keys = jax.random.split(key, logits.shape[0])
-                nxt = jax.vmap(
-                    lambda k, l: jax.random.categorical(k, l / temp))(
-                        keys, logits).astype(jnp.int32)
-            return nxt, pool
+            return sample(logits, active, key, temp), pool
 
+        B = self._pool.n_slots
         return jax.jit(step, donate_argnums=(1,)).lower(
-            self.params, self._pool.pool,
-            jnp.zeros((self._pool.n_slots,), jnp.int32),
-            jax.random.PRNGKey(0)).compile()
+            self.params, self._pool.pool, jnp.zeros((B,), jnp.int32),
+            jnp.zeros((B,), jnp.bool_), jax.random.PRNGKey(0)).compile()
+
+    def _build_paged_step(self, plan: RegionPlan):
+        """AOT-compile one decode+sample step over the paged pool: natively
+        batched over slots, K/V gathered through the block tables."""
+        model, temp = self.model, self.cfg.temperature
+        sample = self._sample_pool
+
+        def step(params, pages, tokens, block_tables, lengths, active, key):
+            logits, pages = model.paged_decode(
+                params, pages, tokens[:, None], block_tables, lengths, plan)
+            logits = logits[:, -1, :].astype(jnp.float32)
+            return sample(logits, active, key, temp), pages
+
+        pool = self._pool
+        B, MP = pool.n_slots, pool.max_pages_per_slot
+        return jax.jit(step, donate_argnums=(1,)).lower(
+            self.params, pool.pages, jnp.zeros((B,), jnp.int32),
+            jnp.zeros((B, MP), jnp.int32), jnp.zeros((B,), jnp.int32),
+            jnp.zeros((B,), jnp.bool_), jax.random.PRNGKey(0)).compile()
+
+    def _chunk_fn(self):
+        """Jitted paged prefill-chunk step (pages donated; the block-table
+        row and base position are traced, so every slot and chunk index
+        shares one executable per chunk width — jit's shape-keyed cache
+        handles the widths)."""
+        if self._chunk_step is None:
+            model, plan = self.model, self.plan
+
+            def chunk_step(params, pages, tokens, bt_row, base):
+                return model.paged_prefill_chunk(params, pages, tokens,
+                                                 bt_row, base, plan)
+
+            self._chunk_step = jax.jit(chunk_step, donate_argnums=(1,))
+        return self._chunk_step
 
     def _prefill_slot(self, prompt: np.ndarray):
         """Fill a fresh single-request cache with prompt[:-1]; the last
@@ -288,11 +398,23 @@ class Engine:
         plan, decisions = PlanDecider(self.dtree).decide(
             self._pool_rc, self.plan, load_frac=load_frac,
             top_n=self.cfg.autoplan_top_n)
-        key = tuple(decisions)
+        key = self._step_cache_key(plan)
         if key not in self._pool_steps:
-            self._pool_steps[key] = self._build_pool_step(plan)
+            self._pool_steps[key] = self._build_step(plan)
         self._pool_step = self._pool_steps[key]
         self.decisions_log.append((n_active, decisions))
+
+    @staticmethod
+    def _step_cache_key(plan: RegionPlan) -> str:
+        """Compiled pool steps are cached by the plan's *step-affecting*
+        content: pool-layout-only knobs (page_size — fixed at pool build)
+        are stripped, so a dtree decision that couldn't change the
+        executable never triggers a recompile stall mid-trace."""
+        import json as _json
+        raw = _json.loads(plan.to_json())
+        for rc in raw.get("regions", {}).values():
+            rc.pop("page_size", None)
+        return _json.dumps(raw, sort_keys=True)
 
     def _validate(self, req: Request):
         cfg = self.model.cfg
@@ -302,6 +424,19 @@ class Engine:
                 raise ValueError(
                     f"request {req.rid}: prompt+generation ({need}) exceeds "
                     f"max_len ({self.cfg.max_len})")
+            if self._paged:
+                # a demand no admission can ever satisfy would make the
+                # FIFO head spin forever — reject it up front
+                from repro.serve.cache import pages_for
+                n = pages_for(need, self._pool.page_size)
+                cap = min(self._pool.max_pages_per_slot,
+                          self._pool.n_pages - 1)
+                if n > cap:
+                    raise ValueError(
+                        f"request {req.rid}: needs {n} KV pages but the "
+                        f"pool can ever grant {cap} (kv_pages="
+                        f"{self._pool.n_pages}, page_size="
+                        f"{self._pool.page_size})")
 
     def serve(self, requests: Sequence[Request]) -> dict:
         """Run a trace of Requests to completion with continuous batching.
@@ -323,8 +458,41 @@ class Engine:
             sched.submit(r)
         sched.sort_queue()
 
+        if self._paged:
+            steps = self._serve_paged(sched)
+        else:
+            steps = self._serve_slots(sched)
+
+        return {
+            "requests": list(requests),
+            "stats": summarize(requests),
+            "steps": steps,
+            "decisions": list(self.decisions_log[log_start:]),
+        }
+
+    def _finish_tokens(self, sched: Scheduler, toks_np, pending, active, t,
+                       on_complete):
+        """Shared post-step bookkeeping: record each active slot's sampled
+        token, complete on budget/EOS, and release its memory."""
+        for slot in list(sched.active):
+            req = sched.active[slot]
+            tok = int(toks_np[slot])
+            if not req.out_tokens:
+                req.t_first = t
+            req.out_tokens.append(tok)
+            pending[slot] = tok
+            eos = req.eos_id if req.eos_id is not None else self.cfg.eos_id
+            if len(req.out_tokens) >= req.max_new_tokens or tok == eos:
+                sched.complete(req, t)
+                active[slot] = False
+                on_complete(slot)
+
+    def _serve_slots(self, sched: Scheduler) -> int:
+        """The slot-pool loop: whole-prompt prefill on admission, vmapped
+        decode over whole-cache slots."""
         pool = self._pool
         pending = np.zeros((pool.n_slots,), np.int32)
+        active = np.zeros((pool.n_slots,), bool)
         key = jax.random.PRNGKey(self.cfg.seed)
         t0 = time.perf_counter()
         now = lambda: time.perf_counter() - t0  # noqa: E731
@@ -340,6 +508,7 @@ class Engine:
                 pool.write(slot, cache)
                 pending[slot] = first_tok
                 sched.bind(req, slot, now())
+                active[slot] = True
             if not sched.active:
                 nxt = sched.next_arrival()
                 if nxt is None:
@@ -352,25 +521,110 @@ class Engine:
             self._maybe_replan(len(sched.active))
             key, sub = jax.random.split(key)
             toks, pool.pool = self._pool_step(
-                self.params, pool.pool, jnp.asarray(pending), sub)
-            toks_np = np.asarray(toks)
+                self.params, pool.pool, jnp.asarray(pending),
+                jnp.asarray(active), sub)
             steps += 1
-            t = now()
-            for slot in list(sched.active):
-                req = sched.active[slot]
-                tok = int(toks_np[slot])
-                if not req.out_tokens:
-                    req.t_first = t
-                req.out_tokens.append(tok)
-                pending[slot] = tok
-                eos = req.eos_id if req.eos_id is not None else self.cfg.eos_id
-                if len(req.out_tokens) >= req.max_new_tokens or tok == eos:
-                    sched.complete(req, t)
-                    pool.free(slot)
+            self._finish_tokens(sched, np.asarray(toks), pending, active,
+                                now(), pool.free)
+        return steps
 
-        return {
-            "requests": list(requests),
-            "stats": summarize(requests),
-            "steps": steps,
-            "decisions": list(self.decisions_log[log_start:]),
-        }
+    def _serve_paged(self, sched: Scheduler) -> int:
+        """The paged-pool loop: reservation-based admission, prompt prefill
+        in chunks interleaved with pool decode steps.
+
+        Between consecutive decode steps at most
+        ``prefill_chunks_per_step`` prompt chunks run, so a long prompt is
+        spread across many steps instead of stalling every in-flight
+        decode until it finishes (the prefill head-of-line blocking the
+        slot path suffers).  Decode-step inputs are masked per step: only
+        DECODE slots expose their block table and length, so mid-prefill
+        slots can never be written by the decode scatter.
+        """
+        pool = self._pool
+        B = pool.n_slots
+        pending = np.zeros((B,), np.int32)
+        active = np.zeros((B,), bool)
+        prefills: list[Request] = []        # admitted, mid-prefill (FIFO)
+        key = jax.random.PRNGKey(self.cfg.seed)
+        t0 = time.perf_counter()
+        now = lambda: time.perf_counter() - t0  # noqa: E731
+        steps = 0
+
+        def admit_ready(t):
+            while True:
+                req = sched.peek_ready(t)
+                if req is None:
+                    return
+                need = req.prompt.size - 1 + req.max_new_tokens
+                slot = pool.admit(need)
+                if slot is None:            # head-of-line waits for memory
+                    return
+                sched.pop_ready(t)
+                sched.bind_prefill(req, slot, now())
+                req.prefill_pos = 0
+                if req.prompt.size < 2:     # no prefix to prefill
+                    pending[slot] = int(req.prompt[-1])
+                    sched.start_decode(req)
+                    active[slot] = True
+                else:
+                    prefills.append(req)
+
+        while not sched.done():
+            admit_ready(now())
+
+            # interleaved chunked prefill: a bounded budget per loop pass
+            budget = max(self.cfg.prefill_chunks_per_step, 1)
+            while budget > 0 and prefills:
+                req = prefills[0]
+                slot = req.slot
+                feed = req.prompt[:-1]
+                # MoE capacity groups depend on the token-group length, so
+                # splitting a prompt would route (and drop) differently
+                # than whole-prompt prefill — keep MoE prompts one chunk
+                if self.model.cfg.n_experts:
+                    C = feed.size
+                else:
+                    C = self.cfg.prefill_chunk or feed.size
+                chunk = feed[req.prefill_pos:req.prefill_pos + C]
+                true_c = chunk.size
+                if true_c < C:
+                    chunk = np.pad(chunk, (0, C - true_c))
+                pool.pages = self._chunk_fn()(
+                    self.params, pool.pages,
+                    jnp.asarray(chunk[None]),
+                    jnp.asarray(pool.block_tables[slot]),
+                    jnp.asarray(req.prefill_pos, jnp.int32))
+                pool.advance(slot, true_c)
+                req.prefill_pos += true_c
+                budget -= 1
+                if req.prefill_pos >= feed.size:
+                    pending[slot] = int(req.prompt[-1])
+                    sched.start_decode(req)
+                    active[slot] = True
+                    prefills.pop(0)
+
+            if not sched.active:
+                if prefills:
+                    continue                # keep prefilling
+                nxt = sched.next_arrival()
+                if nxt is None:
+                    break
+                dt = nxt - now()
+                if dt > 0:
+                    time.sleep(min(dt, 0.05))
+                continue
+
+            self._maybe_replan(len(sched.active))
+            key, sub = jax.random.split(key)
+            # expose only DECODE slots to the step (null page otherwise)
+            toks, pool.pages = self._pool_step(
+                self.params, pool.pages, jnp.asarray(pending),
+                jnp.asarray(pool.block_tables * active[:, None]),
+                jnp.asarray(pool.lengths * active),
+                jnp.asarray(active), sub)
+            steps += 1
+            for slot in sched.active:       # this step wrote one token each
+                pool.advance(slot, 1)
+            self._finish_tokens(sched, np.asarray(toks), pending, active,
+                                now(), pool.release)
+        return steps

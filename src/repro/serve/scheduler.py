@@ -3,12 +3,18 @@
 Requests move WAITING -> PREFILL -> DECODE -> DONE.  Admission is strict
 FIFO over the arrival-ordered queue: a request becomes admissible once its
 ``arrival_s`` has passed (trace-driven serving replays an arrival process),
-and is admitted as soon as a cache slot is free — including mid-flight,
-while other slots are still decoding.  Completion is by per-request token
+and is admitted as soon as a cache slot (and, on the paged pool, its page
+reservation) is available — including mid-flight, while other slots are
+still decoding.  On the paged path PREFILL is a *resident* state: the
+request already holds its slot and pages while its prompt is prefilled in
+chunks interleaved with pool decode steps (``prefill_pos`` tracks
+progress); ``bind_prefill``/``start_decode`` split the old one-shot
+``bind`` into those two transitions.  Completion is by per-request token
 budget (``max_new_tokens``) or an EOS token id.
 
-The scheduler owns lifecycle bookkeeping only; cache slots themselves are
-owned by :class:`repro.serve.cache.SlotKVPool` (the engine mediates).
+The scheduler owns lifecycle bookkeeping only; cache memory itself is
+owned by :class:`repro.serve.cache.PagedKVPool` /
+:class:`repro.serve.cache.SlotKVPool` (the engine mediates).
 """
 from __future__ import annotations
 
@@ -38,6 +44,7 @@ class Request:
     # -- runtime state (filled in by the scheduler/engine) -------------------
     state: RequestState = RequestState.WAITING
     slot: Optional[int] = None
+    prefill_pos: int = 0                # prompt tokens already prefilled
     out_tokens: list = dataclasses.field(default_factory=list)
     t_admit: Optional[float] = None     # seconds since serve() start
     t_first: Optional[float] = None     # first generated token
@@ -56,7 +63,8 @@ class Scheduler:
 
     def __init__(self):
         self._queue: deque[Request] = deque()
-        self.active: dict[int, Request] = {}     # slot -> request
+        self.prefilling: dict[int, Request] = {}  # slot -> mid-prefill request
+        self.active: dict[int, Request] = {}      # slot -> decoding request
         self.finished: list[Request] = []
 
     def submit(self, req: Request) -> None:
@@ -72,6 +80,11 @@ class Scheduler:
     def has_ready(self, now_s: float) -> bool:
         return bool(self._queue) and self._queue[0].arrival_s <= now_s
 
+    def peek_ready(self, now_s: float) -> Optional[Request]:
+        """The next admissible request, left on the queue (admission
+        control checks its memory reservation before popping)."""
+        return self._queue[0] if self.has_ready(now_s) else None
+
     def pop_ready(self, now_s: float) -> Optional[Request]:
         if not self.has_ready(now_s):
             return None
@@ -79,17 +92,30 @@ class Scheduler:
         req.state = RequestState.PREFILL
         return req
 
-    def bind(self, req: Request, slot: int, now_s: float) -> None:
-        """Attach an admitted (prefilled) request to its cache slot."""
-        if slot in self.active:
-            raise ValueError(f"slot {slot} already bound to "
-                             f"request {self.active[slot].rid}")
+    def bind_prefill(self, req: Request, slot: int, now_s: float) -> None:
+        """Make a popped request resident on ``slot`` while it prefills."""
+        if slot in self.active or slot in self.prefilling:
+            raise ValueError(f"slot {slot} already bound")
         if req.state is not RequestState.PREFILL:
             raise ValueError(f"request {req.rid} not in PREFILL")
-        req.state = RequestState.DECODE
         req.slot = slot
         req.t_admit = now_s
-        self.active[slot] = req
+        self.prefilling[slot] = req
+
+    def start_decode(self, req: Request) -> None:
+        """Prompt fully prefilled: the request joins the decode batch."""
+        if self.prefilling.get(req.slot) is not req:
+            raise ValueError(f"request {req.rid} not prefilling on "
+                             f"slot {req.slot}")
+        del self.prefilling[req.slot]
+        req.state = RequestState.DECODE
+        self.active[req.slot] = req
+
+    def bind(self, req: Request, slot: int, now_s: float) -> None:
+        """One-shot admission (slot path: the whole prompt prefills at
+        once): bind_prefill + start_decode."""
+        self.bind_prefill(req, slot, now_s)
+        self.start_decode(req)
 
     # -- completion ----------------------------------------------------------
     def complete(self, req: Request, now_s: float) -> None:
@@ -102,7 +128,7 @@ class Scheduler:
         self.finished.append(req)
 
     def done(self) -> bool:
-        return not self._queue and not self.active
+        return not self._queue and not self.active and not self.prefilling
 
     def next_arrival(self) -> Optional[float]:
         return self._queue[0].arrival_s if self._queue else None

@@ -174,11 +174,12 @@ def test_continuous_matches_static_staggered(engine):
 
 
 def test_continuous_bucketed_prefill_matches_exact(engine):
-    """Pad-to-bucket prefill (warm jit across prompt lengths) is lossless
-    for full-KV caches: pad K/V entries are masked then overwritten."""
+    """Slot path: pad-to-bucket prefill (warm jit across prompt lengths) is
+    lossless for full-KV caches: pad K/V entries are masked then
+    overwritten."""
     cfg, eng = engine
     eng_b = Engine(eng.model, eng.params, serve_cfg=ServeConfig(
-        max_len=64, max_slots=2, prefill_bucket=8))
+        max_len=64, max_slots=2, prefill_bucket=8, paged="off"))
     prompts = jax.random.randint(jax.random.PRNGKey(6), (3, 13), 0,
                                  cfg.vocab_size, dtype=jnp.int32)
     static = np.asarray(eng.generate(prompts, 5)["tokens"])
@@ -189,6 +190,117 @@ def test_continuous_bucketed_prefill_matches_exact(engine):
         assert r.out_tokens == static[i].tolist()
     # 13-token prompts feed 12 tokens -> one 16-wide bucket, one jit entry
     assert list(eng_b._slot_prefills) == [16]
+
+
+def test_paged_is_default_for_full_kv(engine):
+    """Dense families serve off the paged pool by default; the slot pool
+    remains selectable and produces identical greedy tokens."""
+    from repro.serve.cache import PagedKVPool
+    cfg, eng = engine
+    eng._ensure_pool()
+    assert isinstance(eng._pool, PagedKVPool)
+    eng_s = Engine(eng.model, eng.params, serve_cfg=ServeConfig(
+        max_len=64, max_slots=3, paged="off"))
+    prompts = jax.random.randint(jax.random.PRNGKey(11), (2, 11), 0,
+                                 cfg.vocab_size, dtype=jnp.int32)
+    reqs_p = [Request(rid=i, prompt=np.asarray(prompts[i]), max_new_tokens=5)
+              for i in range(2)]
+    reqs_s = [Request(rid=i, prompt=np.asarray(prompts[i]), max_new_tokens=5)
+              for i in range(2)]
+    eng.serve(reqs_p)
+    eng_s.serve(reqs_s)
+    for rp, rs in zip(reqs_p, reqs_s):
+        assert rp.out_tokens == rs.out_tokens
+
+
+def test_chunked_prefill_matches_static(engine):
+    """Chunked prefill (prompt split into fixed pieces interleaved with
+    decode steps) reproduces the static path's greedy tokens, across chunk
+    sizes that do and don't divide the prompt or page size."""
+    cfg, eng = engine
+    prompts = jax.random.randint(jax.random.PRNGKey(12), (3, 13), 0,
+                                 cfg.vocab_size, dtype=jnp.int32)
+    static = np.asarray(eng.generate(prompts, 5)["tokens"])
+    for chunk in (3, 4, 8):
+        eng_c = Engine(eng.model, eng.params, serve_cfg=ServeConfig(
+            max_len=64, max_slots=2, page_size=8, prefill_chunk=chunk))
+        reqs = [Request(rid=i, prompt=np.asarray(prompts[i]),
+                        max_new_tokens=5, arrival_s=0.004 * i)
+                for i in range(3)]
+        eng_c.serve(reqs)
+        for i, r in enumerate(reqs):
+            assert r.out_tokens == static[i].tolist(), f"chunk={chunk} req {i}"
+        assert eng_c._pool.n_free == 2
+        eng_c._pool.allocator.check_invariants()
+
+
+def test_chunked_prefill_pad_overhang_at_max_len(engine):
+    """A padded final chunk whose pad positions overhang the block table's
+    reach (prompt near max_len, chunk width not dividing the feed) must
+    route the overhanging writes to the null page, not clamp into the
+    request's own last page — greedy tokens stay equal to the static path."""
+    cfg, eng = engine
+    prompts = jax.random.randint(jax.random.PRNGKey(15), (1, 15), 0,
+                                 cfg.vocab_size, dtype=jnp.int32)
+    static = np.asarray(eng.generate(prompts, 2)["tokens"])
+    eng_c = Engine(eng.model, eng.params, serve_cfg=ServeConfig(
+        max_len=16, max_slots=1, page_size=8, prefill_chunk=12))
+    req = Request(rid=0, prompt=np.asarray(prompts[0]), max_new_tokens=2)
+    eng_c.serve([req])                    # pads cover positions 14..23 > 16
+    assert req.out_tokens == static[0].tolist()
+    eng_c._pool.allocator.check_invariants()
+
+
+def test_paged_rejects_unsatisfiable_request(engine):
+    """A demand no admission could ever satisfy (more pages than the pool
+    holds) is rejected up front instead of spinning the serve loop."""
+    cfg, eng = engine
+    eng_t = Engine(eng.model, eng.params, serve_cfg=ServeConfig(
+        max_len=64, max_slots=2, page_size=16, kv_pages=3))
+    prompts = jax.random.randint(jax.random.PRNGKey(16), (1, 8), 0,
+                                 cfg.vocab_size, dtype=jnp.int32)
+    ok = Request(rid=0, prompt=np.asarray(prompts[0]), max_new_tokens=20)
+    eng_t.serve([ok])                     # 27 tokens -> 2 pages: fits
+    assert len(ok.out_tokens) == 20
+    bad = Request(rid=1, prompt=np.asarray(prompts[0]), max_new_tokens=40)
+    with pytest.raises(ValueError, match="KV pages"):
+        eng_t.serve([bad])                # 47 tokens -> 3 pages > 2 usable
+
+
+def test_paged_pool_memory_freed_on_completion(engine):
+    """Pages go back to the allocator as requests complete; the high-water
+    mark records the trace's real working set."""
+    cfg, eng = engine
+    eng_p = Engine(eng.model, eng.params, serve_cfg=ServeConfig(
+        max_len=64, max_slots=2, page_size=8))
+    prompts = jax.random.randint(jax.random.PRNGKey(13), (4, 9), 0,
+                                 cfg.vocab_size, dtype=jnp.int32)
+    reqs = [Request(rid=i, prompt=np.asarray(prompts[i]), max_new_tokens=4)
+            for i in range(4)]
+    eng_p.serve(reqs)
+    alloc = eng_p._pool.allocator
+    alloc.check_invariants()
+    assert alloc.n_live == 0                      # everything released
+    assert alloc.high_water >= 2                  # something was resident
+    assert eng_p._pool.high_water_bytes() <= eng_p._pool.hbm_bytes()
+
+
+def test_paged_sampling_masks_inactive_slots(engine):
+    """Temperature sampling over a paged pool with empty slots completes
+    and never emits tokens from garbage logits (inactive slots decode the
+    null page; their samples are pinned to 0 and discarded)."""
+    cfg, eng = engine
+    eng_t = Engine(eng.model, eng.params, serve_cfg=ServeConfig(
+        max_len=64, max_slots=4, page_size=8, temperature=0.7, seed=3))
+    prompts = jax.random.randint(jax.random.PRNGKey(14), (2, 7), 0,
+                                 cfg.vocab_size, dtype=jnp.int32)
+    reqs = [Request(rid=i, prompt=np.asarray(prompts[i]),
+                    max_new_tokens=3 + 2 * i) for i in range(2)]
+    eng_t.serve(reqs)
+    for r in reqs:
+        assert r.state is RequestState.DONE
+        assert len(r.out_tokens) == r.max_new_tokens
+        assert all(0 <= t < cfg.vocab_size for t in r.out_tokens)
 
 
 def test_continuous_eos_stops_early(engine):
