@@ -112,6 +112,9 @@ class RegionConfig:
     page_size: int = 0      # paged-KV block granularity, tokens (0 = default)
     attn_impl: str = ""     # decode attention: '' = gather, 'paged' = Pallas
                             # paged-attention kernel (block_k = its KV tile)
+    spec_depth: int = -1    # speculative decode draft depth per pool step
+                            # (-1 = knob unset; 0 = no speculation; N>0 =
+                            # draft N tokens, verify with q_len N+1)
 
     def to_json(self):
         return dataclasses.asdict(self)

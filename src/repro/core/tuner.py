@@ -42,6 +42,12 @@ class Candidate:
     name: str                      # class label (dtree target)
     config: RegionConfig
     applies_to: str = ""           # region-kind filter substring
+    serve_only: bool = False       # knob invisible to the offline evaluator
+                                   # (e.g. spec_depth: it shapes the serve
+                                   # engine's step, not the region graph) —
+                                   # the tuner skips trialling it, but the
+                                   # serve-time PlanDecider can still apply
+                                   # its class
 
 
 def default_candidates(kind: str = "train") -> list[Candidate]:
@@ -89,6 +95,17 @@ def default_candidates(kind: str = "train") -> list[Candidate]:
                       "attn"),
             Candidate("attn_paged_kernel_bk128", RegionConfig(
                 attn_impl="paged", block_k=128), "attn"),
+            # speculative decode depth: deep speculation wins on memory-bound
+            # low-occupancy pools (drafted queries amortise KV traffic),
+            # loses under compute-bound high occupancy (rejected drafts
+            # burn flops) — exactly the workload-dependent knob the
+            # counters-scaled-by-occupancy decider is built to choose
+            Candidate("spec0", RegionConfig(spec_depth=0), "attn",
+                      serve_only=True),
+            Candidate("spec2", RegionConfig(spec_depth=2), "attn",
+                      serve_only=True),
+            Candidate("spec4", RegionConfig(spec_depth=4), "attn",
+                      serve_only=True),
         ]
     return cands
 
@@ -164,7 +181,8 @@ def autotune(build_fn, mesh, *, kind: str = "train",
         feat = features(region_counters) if region_counters else None
 
         applicable = [c for c in candidates
-                      if c.applies_to in prefix and (prefix, c.name) not in tried]
+                      if c.applies_to in prefix and not c.serve_only
+                      and (prefix, c.name) not in tried]
         if not applicable:
             # dominant region exhausted; try the next-hottest region
             tops = rc.top_regions(
@@ -174,7 +192,7 @@ def autotune(build_fn, mesh, *, kind: str = "train",
             for r, _ in tops[1:]:
                 prefix = canonical(r)
                 applicable = [c for c in candidates
-                              if c.applies_to in prefix
+                              if c.applies_to in prefix and not c.serve_only
                               and (prefix, c.name) not in tried]
                 if applicable:
                     region = r

@@ -12,6 +12,7 @@ from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.linear_scan import ssd_kernel, wkv_kernel
 from repro.kernels.paged_attention import paged_attention as _paged
+from repro.kernels.paged_attention import paged_attention_mq as _paged_mq
 from repro.kernels.tuned_matmul import tuned_matmul
 
 ON_TPU = any(d.platform == "tpu" for d in jax.devices())
@@ -36,6 +37,14 @@ def paged_attention(q, k_pages, v_pages, block_tables, lengths, *,
     """Paged decode attention, already in kernel layout (B, KVH, G, HD)."""
     return _paged(q, k_pages, v_pages, block_tables, lengths,
                   block_k=block_k, interpret=INTERPRET)
+
+
+def paged_attention_mq(q, k_pages, v_pages, block_tables, lengths, *,
+                       block_k=0):
+    """Multi-query paged decode attention (speculative verify), kernel
+    layout q: (B, S, KVH, G, HD); query s sees lengths + s positions."""
+    return _paged_mq(q, k_pages, v_pages, block_tables, lengths,
+                     block_k=block_k, interpret=INTERPRET)
 
 
 def wkv(r, k, v, w, u, s0, *, bt=256):

@@ -1,24 +1,32 @@
-"""Paged-attention decode (Pallas TPU): one query token per sequence
-attending over K/V scattered across a global page pool, gathered through a
-scalar-prefetched block table.
+"""Paged-attention decode (Pallas TPU): a short block of query tokens per
+sequence attending over K/V scattered across a global page pool, gathered
+through a scalar-prefetched block table.
 
-Layout: q is (B, KVH, G, HD) — GQA-grouped so K/V are never materialised at
-the full head count; k_pages/v_pages are (P, page_size, KVH, HD); the block
-table is (B, max_pages) int32 page ids (zero-padded — page 0 is the pool's
-null sink) and lengths is (B,) int32 valid-token counts.
+Layout: q is (B, S, KVH, G, HD) — S is the per-slot query length (1 for
+plain decode, ``spec_depth + 1`` for the speculative verify step) and the
+heads are GQA-grouped so K/V are never materialised at the full head count;
+k_pages/v_pages are (P, page_size, KVH, HD); the block table is
+(B, max_pages) int32 page ids (zero-padded — page 0 is the pool's null
+sink) and lengths is (B,) int32: the number of KV positions visible to
+query 0 (each later query sees one more — the staircase causal mask of a
+speculative block whose own K/V rows are already written).
 
-The grid is (B, max_pages, page_size // block_k): the second dimension walks
-a sequence's block table (each step's K/V block is DMA'd straight from the
-page the table names — the gather happens in the BlockSpec index map, so
-only pages the sequence actually occupies move into VMEM), and the third
-tiles within a page.  ``block_k`` is the tuned inner block size (VMEM tile
-per step, <= page_size, surfaced as ``RegionConfig.block_k``); ``page_size``
-itself is the pool-layout knob.  Online softmax accumulates in VMEM scratch
-across the km blocks of one sequence, exactly as in flash_attention.
+The grid is (B, max_pages, page_size // block_k): the second dimension
+walks a sequence's block table (each step's K/V block is DMA'd straight
+from the page the table names — the gather happens in the BlockSpec index
+map, so only pages the sequence actually occupies move into VMEM), and the
+third tiles within a page.  ``block_k`` is the tuned inner block size (VMEM
+tile per step, <= page_size, surfaced as ``RegionConfig.block_k``);
+``page_size`` itself is the pool-layout knob.  Online softmax accumulates
+in VMEM scratch across the km blocks of one sequence — the running
+max/denominator carry one row per (query, head) pair, so all S queries of
+a slot share each K/V DMA instead of issuing S single-query passes (the
+whole point of the multi-query verify kernel: speculation adds queries,
+which are tiny, not KV traffic, which is the decode bottleneck).
 
-Rows whose length is 0 (inactive pool slots) have every position masked;
-their output is a garbage-but-finite average of null-page V that the engine
-masks out at sampling.
+Rows whose length is 0 (inactive pool slots) have every position masked
+for query 0; their output is a garbage-but-finite average of null-page V
+that the engine masks out at sampling.
 """
 from __future__ import annotations
 
@@ -33,10 +41,10 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _paged_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
-                  m_ref, l_ref, acc_ref, *,
-                  scale: float, page_size: int, bk: int, n_tiles: int,
-                  max_pages: int):
+def _paged_mq_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                     m_ref, l_ref, acc_ref, *,
+                     scale: float, page_size: int, bk: int, n_tiles: int,
+                     max_pages: int):
     b = pl.program_id(0)
     p = pl.program_id(1)
     t = pl.program_id(2)
@@ -47,48 +55,52 @@ def _paged_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    kvh, g, hd = q_ref.shape[1], q_ref.shape[2], q_ref.shape[3]
-    q = q_ref[0].astype(jnp.float32)                       # (KVH, G, HD)
+    s_len, kvh, g, hd = (q_ref.shape[1], q_ref.shape[2], q_ref.shape[3],
+                         q_ref.shape[4])
+    q = q_ref[0].astype(jnp.float32)                       # (S, KVH, G, HD)
     k = k_ref[0].astype(jnp.float32)                       # (bk, KVH, HD)
     v = v_ref[0].astype(jnp.float32)
 
-    # token positions of this tile and the row's valid-length mask
+    # token positions of this tile; query s sees len + s positions (the
+    # staircase mask over the already-written speculative K/V rows)
     kpos = p * page_size + t * bk + jax.lax.broadcasted_iota(
         jnp.int32, (1, bk), 1)[0]
-    valid = kpos < len_ref[b]
+    qoff = jax.lax.broadcasted_iota(jnp.int32, (s_len, kvh, g, bk), 0)
+    valid = kpos[None, None, None, :] < len_ref[b] + qoff
 
-    s = jnp.einsum("hge,khe->hgk", q, k,
+    s = jnp.einsum("shge,khe->shgk", q, k,
                    preferred_element_type=jnp.float32) * scale
-    s = s.reshape(kvh * g, bk)
-    s = jnp.where(valid[None, :], s, NEG_INF)
+    s = jnp.where(valid, s, NEG_INF).reshape(s_len * kvh * g, bk)
 
-    m_prev = m_ref[...]                                    # (KVH*G, 1)
+    m_prev = m_ref[...]                                    # (S*KVH*G, 1)
     l_prev = l_ref[...]
     m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
     pexp = jnp.exp(s - m_new)
     alpha = jnp.exp(m_prev - m_new)
     l_new = alpha * l_prev + jnp.sum(pexp, axis=-1, keepdims=True)
-    pv = jnp.einsum("hgk,khe->hge", pexp.reshape(kvh, g, bk), v,
+    pv = jnp.einsum("shgk,khe->shge", pexp.reshape(s_len, kvh, g, bk), v,
                     preferred_element_type=jnp.float32)
-    acc_ref[...] = acc_ref[...] * alpha + pv.reshape(kvh * g, hd)
+    acc_ref[...] = acc_ref[...] * alpha + pv.reshape(s_len * kvh * g, hd)
     m_ref[...] = m_new
     l_ref[...] = l_new
 
     @pl.when((p == max_pages - 1) & (t == n_tiles - 1))
     def _flush():
         out = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
-        o_ref[0] = out.reshape(kvh, g, hd).astype(o_ref.dtype)
+        o_ref[0] = out.reshape(s_len, kvh, g, hd).astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
-def paged_attention(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
-                    block_tables: jax.Array, lengths: jax.Array, *,
-                    block_k: int = 0, interpret: bool = False) -> jax.Array:
-    """q: (B, KVH, G, HD); pages: (P, page_size, KVH, HD) -> (B, KVH, G, HD).
+def paged_attention_mq(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                       block_tables: jax.Array, lengths: jax.Array, *,
+                       block_k: int = 0, interpret: bool = False) -> jax.Array:
+    """q: (B, S, KVH, G, HD); pages: (P, page_size, KVH, HD) -> same as q.
 
-    ``block_tables``: (B, max_pages) int32, ``lengths``: (B,) int32.
+    ``block_tables``: (B, max_pages) int32; ``lengths``: (B,) int32 KV
+    positions visible to query 0 (query ``s`` sees ``lengths + s`` — the
+    speculative block's own rows are already in the pages).
     """
-    B, kvh, g, hd = q.shape
+    B, s_len, kvh, g, hd = q.shape
     _, page_size, kvh_p, hd_p = k_pages.shape
     assert (kvh_p, hd_p) == (kvh, hd), "page layout mismatch"
     max_pages = block_tables.shape[1]
@@ -97,30 +109,45 @@ def paged_attention(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
     n_tiles = page_size // bk
 
     kern = functools.partial(
-        _paged_kernel, scale=1.0 / math.sqrt(hd), page_size=page_size,
+        _paged_mq_kernel, scale=1.0 / math.sqrt(hd), page_size=page_size,
         bk=bk, n_tiles=n_tiles, max_pages=max_pages)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(B, max_pages, n_tiles),
         in_specs=[
-            pl.BlockSpec((1, kvh, g, hd), lambda b, p, t, bt, ln: (b, 0, 0, 0)),
+            pl.BlockSpec((1, s_len, kvh, g, hd),
+                         lambda b, p, t, bt, ln: (b, 0, 0, 0, 0)),
             pl.BlockSpec((1, bk, kvh, hd),
                          lambda b, p, t, bt, ln: (bt[b, p], t, 0, 0)),
             pl.BlockSpec((1, bk, kvh, hd),
                          lambda b, p, t, bt, ln: (bt[b, p], t, 0, 0)),
         ],
-        out_specs=pl.BlockSpec((1, kvh, g, hd),
-                               lambda b, p, t, bt, ln: (b, 0, 0, 0)),
+        out_specs=pl.BlockSpec((1, s_len, kvh, g, hd),
+                               lambda b, p, t, bt, ln: (b, 0, 0, 0, 0)),
         scratch_shapes=[
-            pltpu.VMEM((kvh * g, 1), jnp.float32),
-            pltpu.VMEM((kvh * g, 1), jnp.float32),
-            pltpu.VMEM((kvh * g, hd), jnp.float32),
+            pltpu.VMEM((s_len * kvh * g, 1), jnp.float32),
+            pltpu.VMEM((s_len * kvh * g, 1), jnp.float32),
+            pltpu.VMEM((s_len * kvh * g, hd), jnp.float32),
         ],
     )
     return pl.pallas_call(
         kern,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((B, kvh, g, hd), q.dtype),
+        out_shape=jax.ShapeDtypeStruct((B, s_len, kvh, g, hd), q.dtype),
         interpret=interpret,
     )(block_tables.astype(jnp.int32), lengths.astype(jnp.int32),
       q, k_pages, v_pages)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def paged_attention(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                    block_tables: jax.Array, lengths: jax.Array, *,
+                    block_k: int = 0, interpret: bool = False) -> jax.Array:
+    """Single-query decode: q (B, KVH, G, HD) -> (B, KVH, G, HD).
+
+    The S=1 specialisation of :func:`paged_attention_mq` (kept as the
+    stable entry point for plain decode callers and the kernel tests).
+    """
+    out = paged_attention_mq(q[:, None], k_pages, v_pages, block_tables,
+                             lengths, block_k=block_k, interpret=interpret)
+    return out[:, 0]

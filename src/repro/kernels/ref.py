@@ -28,26 +28,41 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0):
     return jnp.einsum("bhqk,bkhe->bqhe", p, v.astype(jnp.float32))
 
 
-def paged_attention(q, k_pages, v_pages, block_tables, lengths):
-    """Paged decode oracle. q: (B, KVH, G, HD); pages: (P, ps, KVH, HD);
-    block_tables: (B, MP) int32; lengths: (B,) int32 -> (B, KVH, G, HD).
+def paged_attention_mq(q, k_pages, v_pages, block_tables, lengths):
+    """Multi-query paged decode oracle (the speculative verify step's
+    attention).  q: (B, S, KVH, G, HD); pages: (P, ps, KVH, HD);
+    block_tables: (B, MP) int32; lengths: (B,) int32 -> same shape as q.
 
-    Gathers every sequence's pages dense, masks positions >= length, and
-    runs plain grouped-GQA softmax attention for the single query token.
+    Gathers every sequence's pages dense and runs grouped-GQA softmax
+    attention with the staircase mask: query ``s`` sees ``lengths + s``
+    positions (the speculative block's own K/V rows are already written,
+    each query attending causally up to and including its own row).
     """
-    B, KVH, G, D = q.shape
+    B, S, KVH, G, D = q.shape
     ps = k_pages.shape[1]
     k = k_pages[block_tables]                  # (B, MP, ps, KVH, HD)
     v = v_pages[block_tables]
     T = k.shape[1] * ps
     k = k.reshape(B, T, KVH, D)
     v = v.reshape(B, T, KVH, D)
-    s = jnp.einsum("bhge,bkhe->bhgk", q.astype(jnp.float32),
+    s = jnp.einsum("bshge,bkhe->bshgk", q.astype(jnp.float32),
                    k.astype(jnp.float32)) / math.sqrt(D)
-    valid = jnp.arange(T)[None, :] < lengths[:, None]
-    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    qpos = lengths[:, None] + jnp.arange(S)[None, :]       # (B, S)
+    valid = jnp.arange(T)[None, None, :] < qpos[:, :, None]
+    s = jnp.where(valid[:, :, None, None, :], s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
-    return jnp.einsum("bhgk,bkhe->bhge", p, v.astype(jnp.float32))
+    return jnp.einsum("bshgk,bkhe->bshge", p, v.astype(jnp.float32))
+
+
+def paged_attention(q, k_pages, v_pages, block_tables, lengths):
+    """Paged decode oracle. q: (B, KVH, G, HD); pages: (P, ps, KVH, HD);
+    block_tables: (B, MP) int32; lengths: (B,) int32 -> (B, KVH, G, HD).
+
+    The S=1 specialisation of :func:`paged_attention_mq`: one query token
+    per sequence over its first ``lengths`` positions.
+    """
+    return paged_attention_mq(q[:, None], k_pages, v_pages, block_tables,
+                              lengths)[:, 0]
 
 
 def wkv_linear_scan(r, k, v, w, u, s0):

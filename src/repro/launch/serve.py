@@ -63,11 +63,17 @@ def run_static(engine: Engine, reqs: list[Request], slots: int) -> dict:
             extra = {"frames": jnp.zeros(
                 (len(group), cfg.enc_len, cfg.d_model), jnp.bfloat16)}
         n_steps = max(r.max_new_tokens for r in group)
-        out = np.asarray(engine.generate(prompts, n_steps, extra)["tokens"])
+        t_gen0 = time.perf_counter() - t0
+        res = engine.generate(prompts, n_steps, extra)
+        out = np.asarray(res["tokens"])
         t = time.perf_counter() - t0
+        # the group's first tokens land right after its prefill — TTFT is
+        # prefill latency, not group completion
+        t_first = t_gen0 + res["prefill_s"]
         for j, r in enumerate(group):
             r.out_tokens = out[j, :r.max_new_tokens].tolist()
-            r.t_first = r.t_done = t
+            r.t_first = t_first
+            r.t_done = t
             from repro.serve.scheduler import RequestState
             r.state = RequestState.DONE
     return {"requests": reqs, "stats": summarize(reqs)}
@@ -101,6 +107,16 @@ def main(argv=None):
                          "case; lower trades HBM for queueing)")
     ap.add_argument("--prefill-chunk", type=int, default=0,
                     help="chunked prefill piece size (0 = whole prompt)")
+    ap.add_argument("--spec-depth", default="auto",
+                    choices=("auto", "0", "1", "2", "3", "4"),
+                    help="speculative decode draft depth per pool step "
+                         "(paged pool, greedy only): N drafts per slot via "
+                         "n-gram self-lookup, verified by one multi-query "
+                         "step — greedy tokens stay bit-identical to "
+                         "non-speculative decode.  'auto' lets the "
+                         "serve-time PlanDecider pick the spec0/spec2/spec4 "
+                         "decode candidates per load bucket from occupancy-"
+                         "scaled counters (requires --dtree; otherwise off)")
     ap.add_argument("--max-len", type=int, default=0,
                     help="cache length (default: prompt+gen headroom)")
     ap.add_argument("--temperature", type=float, default=0.0)
@@ -126,7 +142,9 @@ def main(argv=None):
         max_slots=args.slots, eos_id=args.eos_id,
         prefill_bucket=args.prefill_bucket, paged=args.paged,
         page_size=args.page_size, kv_pages=args.kv_pages,
-        prefill_chunk=args.prefill_chunk), dtree=dtree)
+        prefill_chunk=args.prefill_chunk,
+        spec_depth=-1 if args.spec_depth == "auto" else int(args.spec_depth)),
+        dtree=dtree)
 
     reqs = build_trace(args, cfg.vocab_size)
     if args.mode == "static":
@@ -152,6 +170,12 @@ def main(argv=None):
               f"pool={pool.hbm_bytes()/2**20:.1f} MiB "
               f"high-water={pool.high_water_bytes()/2**20:.1f} MiB "
               f"({pool.allocator.high_water} pages)")
+        sp = res.get("spec", {})
+        if sp.get("max_depth", 0) > 0:      # speculation actually ran
+            print(f"[spec] depth={args.spec_depth} (max used "
+                  f"{sp['max_depth']}) committed {sp['committed_tokens']} "
+                  f"tokens in {res['steps']} steps "
+                  f"-> {sp['tokens_per_step']:.2f} tokens/step")
     return res
 
 

@@ -272,41 +272,57 @@ def _paged_gather(pages, block_table):
 def apply_attention_paged_decode(cfg, p, x, pages, block_tables, lengths,
                                  plan: RegionPlan,
                                  name: str = "attn") -> tuple[jax.Array, Any]:
-    """One-token decode for every pool slot against the paged KV pool.
+    """Decode a short block of S tokens for every pool slot against the
+    paged KV pool (S=1: plain decode; S=spec_depth+1: the speculative
+    verify step scoring a drafted block in one pass).
 
-    x: (B, 1, D) — B is the slot axis; pages: {"k_pages","v_pages"}:
+    x: (B, S, D) — B is the slot axis; pages: {"k_pages","v_pages"}:
     (P, ps, KV, HD); block_tables: (B, MP) int32; lengths: (B,) int32
-    tokens already written per slot (the new token lands at offset
-    ``lengths[b]``, so slots carry independent positions natively — no
-    vmap over single-request caches).
+    tokens already written per slot.  Token i of a slot lands at offset
+    ``lengths[b] + i`` and its query attends causally up to and including
+    its own row (the staircase mask), so slots carry independent positions
+    natively — no vmap over single-request caches.  Rejected speculative
+    rows are rolled back host-side (lengths truncate; the rows are
+    overwritten by the next step's writes before any mask admits them).
 
     The attention impl is a region knob: the default gathers each slot's
     pages dense and runs the grouped-GQA einsum (identical math to the
     slot path's ``apply_attention_decode``); ``attn_impl='paged'`` calls
-    the Pallas paged-attention kernel, which DMAs K/V page-by-page through
-    the block table with a ``block_k``-sized inner tile.
+    the multi-query Pallas paged-attention kernel, which DMAs K/V
+    page-by-page through the block table with a ``block_k``-sized inner
+    tile, all S queries sharing each DMA.
     """
     with region(name) as rpath:
-        B = x.shape[0]
-        positions = lengths[:, None]                        # (B, 1) per-slot
+        B, S, _ = x.shape
+        positions = lengths[:, None] + jnp.arange(S, dtype=jnp.int32)[None, :]
         q, k_new, v_new = _qkv_rope(cfg, p, x, positions)
 
-        k_pages = _paged_write(pages["k_pages"], k_new[:, 0],
-                               block_tables, lengths)
-        v_pages = _paged_write(pages["v_pages"], v_new[:, 0],
-                               block_tables, lengths)
+        kvh, hd = cfg.n_kv_heads, q.shape[-1]
+        # S is static: the plain decode step (S=1) keeps the exact
+        # single-row scatter — the repeat/reshape generalisation measurably
+        # slows the hot path it doesn't need
+        if S == 1:
+            bt_rows, offsets, new_rows = block_tables, lengths, k_new[:, 0]
+            v_rows = v_new[:, 0]
+        else:
+            bt_rows = jnp.repeat(block_tables, S, axis=0)   # (B*S, MP)
+            offsets = positions.reshape(-1)
+            new_rows = k_new.reshape(B * S, kvh, hd)
+            v_rows = v_new.reshape(B * S, kvh, hd)
+        k_pages = _paged_write(pages["k_pages"], new_rows, bt_rows, offsets)
+        v_pages = _paged_write(pages["v_pages"], v_rows, bt_rows, offsets)
         new_pages = {"k_pages": k_pages, "v_pages": v_pages}
 
-        hd = q.shape[-1]
-        kvh, grp = cfg.n_kv_heads, cfg.n_heads // cfg.n_kv_heads
-        qg = q.reshape(B, kvh, grp, hd)
+        grp = cfg.n_heads // kvh
         rc = plan.config_for(rpath)
         if rc.attn_impl == "paged":
             from repro.kernels import ops
-            attn = ops.paged_attention(qg, k_pages, v_pages, block_tables,
-                                       lengths + 1, block_k=rc.block_k)
+            qg = q.reshape(B, S, kvh, grp, hd)
+            attn = ops.paged_attention_mq(qg, k_pages, v_pages, block_tables,
+                                          lengths + 1, block_k=rc.block_k)
             attn = attn.astype(x.dtype)
-        else:
+        elif S == 1:
+            qg = q.reshape(B, kvh, grp, hd)
             k = _paged_gather(k_pages, block_tables)        # (B, T, KV, HD)
             v = _paged_gather(v_pages, block_tables)
             T = k.shape[1]
@@ -319,7 +335,22 @@ def apply_attention_paged_decode(cfg, p, x, pages, block_tables, lengths,
                           s.astype(jnp.float32), NEG_INF)
             probs = jax.nn.softmax(s, axis=-1).astype(x.dtype)
             attn = jnp.einsum("bhgk,bkhe->bhge", probs, v)
-        attn = attn.reshape(B, 1, cfg.n_heads, hd)
+        else:
+            qg = q.reshape(B, S, kvh, grp, hd)
+            k = _paged_gather(k_pages, block_tables)        # (B, T, KV, HD)
+            v = _paged_gather(v_pages, block_tables)
+            T = k.shape[1]
+            # staircase: query i sees every written position through its own
+            valid = (jnp.arange(T, dtype=jnp.int32)[None, None, :]
+                     <= positions[:, :, None])              # (B, S, T)
+            s = jnp.einsum("bshge,bkhe->bhsgk", qg, k) / math.sqrt(hd)
+            s = plan.constrain(s, rpath,
+                               ("batch", "kv_heads", None, None, "kv_seq"))
+            s = jnp.where(valid[:, None, :, None, :],
+                          s.astype(jnp.float32), NEG_INF)
+            probs = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+            attn = jnp.einsum("bhsgk,bkhe->bshge", probs, v)
+        attn = attn.reshape(B, S, cfg.n_heads, hd)
         out = jnp.einsum("bshe,hed->bsd", attn, p["wo"])
         return plan.constrain(out, rpath, ("batch", "seq", "embed")), new_pages
 

@@ -158,11 +158,14 @@ def paged_decode_step(cfg, params, pages, tokens, block_tables, lengths,
                       plan: RegionPlan):
     """One decode step for every pool slot, natively batched over slots.
 
-    tokens: (B, 1); block_tables: (B, MP) int32 (all-zero rows park a slot
-    on the null page); lengths: (B,) int32 tokens already written per slot.
-    Returns (logits (B, 1, V), new_pages).  Each slot carries its own
-    position — the continuous-batching property — without vmapping a
-    single-request cache: the pool IS the batch.
+    tokens: (B, S) — S=1 for plain decode, S=spec_depth+1 for the
+    speculative verify step (each slot's pending token followed by its
+    drafted continuation, scored in one fixed-shape pass); block_tables:
+    (B, MP) int32 (all-zero rows park a slot on the null page); lengths:
+    (B,) int32 tokens already written per slot.  Returns
+    (logits (B, S, V), new_pages).  Each slot carries its own position —
+    the continuous-batching property — without vmapping a single-request
+    cache: the pool IS the batch.
     """
     x = L.apply_embed(cfg, params["embed"], tokens, plan)
     x, new_layers = _block_loop(

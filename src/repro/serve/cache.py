@@ -201,7 +201,10 @@ class PagedKVPool:
         self.lengths[slot] = 0
 
     def advance(self, slot: int, n_tokens: int) -> None:
-        """Record ``n_tokens`` newly written tokens for ``slot``."""
+        """Record ``n_tokens`` newly written tokens for ``slot`` (multi-token
+        append: the speculative verify step writes a whole drafted block at
+        once — K/V rows land at offsets ``lengths .. lengths+n-1`` inside
+        the pages the slot already reserved, so no allocator traffic)."""
         if slot not in self._active:
             raise ValueError(f"slot {slot} is not active")
         new_len = int(self.lengths[slot]) + n_tokens
@@ -209,6 +212,30 @@ class PagedKVPool:
             raise ValueError(f"slot {slot} overflows its block table "
                              f"({new_len} tokens)")
         self.lengths[slot] = new_len
+
+    def reserved_tokens(self, slot: int) -> int:
+        """Token capacity of the pages ``slot`` actually holds — the reach
+        of its block table.  Writes beyond it land in the null page, so
+        speculative acceptance must stop here (not at the pool-wide
+        ``max_pages_per_slot`` bound, which a lazily-allocated slot need
+        not have reserved)."""
+        if slot not in self._active:
+            raise ValueError(f"slot {slot} is not active")
+        return int(np.count_nonzero(self.block_tables[slot])) * self.page_size
+
+    def rollback(self, slot: int, n_tokens: int) -> None:
+        """Truncate ``slot`` by ``n_tokens`` — the rejected tail of a
+        speculative block.  Pure length bookkeeping, no page churn: the
+        slot keeps every reserved page (so high-water accounting is
+        untouched) and the stale K/V rows beyond the new length are masked
+        by attention and overwritten by the next step's writes before any
+        mask admits them."""
+        if slot not in self._active:
+            raise ValueError(f"slot {slot} is not active")
+        if n_tokens < 0 or n_tokens > int(self.lengths[slot]):
+            raise ValueError(f"slot {slot}: cannot roll back {n_tokens} of "
+                             f"{int(self.lengths[slot])} tokens")
+        self.lengths[slot] -= n_tokens
 
     # -- memory accounting ---------------------------------------------------
     def page_bytes(self) -> int:

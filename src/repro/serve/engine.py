@@ -29,6 +29,23 @@ Two paths share one Engine:
   paged-attention kernel when the plan sets ``attn_impl='paged'`` (its
   inner KV tile is ``block_k``).
 
+  **Speculative multi-token decode** (``spec_depth`` > 0, greedy only):
+  each pool step drafts up to ``spec_depth`` tokens per active slot by
+  n-gram lookup over the slot's own generated history (no second model —
+  :func:`draft_ngram`), then ONE fixed-shape jitted verify step scores
+  pending-token + drafts for every slot at once (``q_len = spec_depth+1``
+  queries against the block-table-gathered K/V).  The longest drafted
+  prefix matching the verify step's own argmax chain is committed — so
+  greedy outputs are bit-identical to the non-speculative path, token for
+  token; acceptance only reorders work — and the rejected tail is rolled
+  back in the :class:`repro.serve.cache.PagedKVPool` by pure length
+  truncation (no page churn).  ``spec_depth`` is a first-class
+  ``RegionConfig`` knob (decode candidates ``spec0/spec2/spec4``): with
+  ``--spec-depth auto`` the serve-time :class:`PlanDecider` picks it per
+  load bucket from measured counters scaled by occupancy — deep
+  speculation on memory-bound low-occupancy pools, shallow under
+  compute-bound high occupancy.
+
   Families whose per-request state does not grow with the sequence
   (ssm/hybrid recurrent state, sliding-window rings) keep the **slot
   pool**: whole caches stacked on a slot axis, the single-request
@@ -86,6 +103,61 @@ class ServeConfig:
                                 # prompt in one chunk)
     prefill_chunks_per_step: int = 1   # prefill chunks interleaved between
                                        # consecutive pool decode steps
+    # -- speculative decode (paged pool, greedy only) ------------------------
+    spec_depth: int = -1        # draft tokens per pool step: -1 = auto (the
+                                # plan's attn-region spec_depth knob, the
+                                # PlanDecider's channel); 0 = off; N>0 fixed
+
+
+def sample_rows(logits: jax.Array, key, temperature: float) -> jax.Array:
+    """THE sampler: (N, V) float32 logits -> (N,) int32 token per row —
+    greedy argmax at temperature <= 0, else per-row categorical with an
+    independent key per row (so a row's sample never depends on pool
+    composition).  Every path — static lockstep, slot pool, paged pool and
+    the speculative verify step — funnels through this one function."""
+    if temperature <= 0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    keys = jax.random.split(key, logits.shape[0])
+    return jax.vmap(
+        lambda k, l: jax.random.categorical(k, l / temperature))(
+            keys, logits).astype(jnp.int32)
+
+
+def load_bucket(n_active: int) -> int:
+    """Occupancy bucket for replan triggering: the next power of two >=
+    n_active (1 for an empty/single-slot pool).  The decider re-runs only
+    when the bucket changes, so plan churn is logarithmic in load swings
+    while the counters it scales by still track occupancy."""
+    return 1 << max(0, n_active - 1).bit_length()
+
+
+def draft_ngram(history: np.ndarray, depth: int, *, max_ngram: int = 3,
+                window: int = 512) -> np.ndarray:
+    """Self-speculative draft: propose ``depth`` tokens by n-gram lookup
+    over the request's own token history (prompt + generated output — no
+    second model).  Finds the most recent earlier occurrence of the
+    current suffix (longest n first) and copies the tokens that followed
+    it; with no match — or to pad a short match — it repeats the last
+    token, which is exactly the degenerate-loop continuation greedy decode
+    of a converged sequence produces.  A bad draft costs only wasted
+    verify compute, never a wrong token (the verify step's argmax chain is
+    the ground truth)."""
+    history = history[-window:]
+    H = history.size
+    out = np.full((depth,), history[-1], np.int32)
+    for n in range(min(max_ngram, H - 1), 0, -1):
+        # vectorised suffix search (this runs per slot per decode step —
+        # a Python scan over the window would rival the device step time)
+        windows = np.lib.stride_tricks.sliding_window_view(history, n)[:-1]
+        hits = np.flatnonzero((windows == history[H - n:]).all(axis=1))
+        if hits.size:
+            i = int(hits[-1])             # most recent earlier occurrence
+            cont = history[i + n:i + n + depth]
+            out[:cont.size] = cont
+            if cont.size < depth:
+                out[cont.size:] = cont[-1]
+            return out
+    return out
 
 
 def _overlay(base: RegionConfig, cand: RegionConfig) -> RegionConfig:
@@ -173,18 +245,16 @@ class Engine:
         self._build_step = None                     # plan -> compiled step
         self._slot_prefills: dict[int, Any] = {}    # feed_len -> jitted fn
         self._chunk_step = None                     # paged prefill-chunk fn
-        self._pool_steps: dict[tuple, Any] = {}     # decisions -> compiled
+        self._pool_steps: dict = {}                 # key -> (compiled, depth)
         self._pool_step = None
+        self._spec_depth = 0                        # depth of _pool_step
         self._pool_rc = None                        # counters of base step
         self._load_bucket: Optional[int] = None
         self.decisions_log: list = []
 
     def _sample(self, logits, key):
-        logits = logits[:, -1, :].astype(jnp.float32)
-        if self.cfg.temperature <= 0:
-            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        return jax.random.categorical(
-            key, logits / self.cfg.temperature).astype(jnp.int32)
+        return sample_rows(logits[:, -1, :].astype(jnp.float32), key,
+                           self.cfg.temperature)
 
     # ------------------------------------------------------------------
     # Static lockstep batching (the baseline path)
@@ -249,6 +319,27 @@ class Engine:
         rc = self.plan.config_for("layer0/attn")
         return self.cfg.page_size or rc.page_size or 16
 
+    def _spec_knob_live(self) -> bool:
+        """Whether spec_depth is the PlanDecider's to choose: only in auto
+        mode (ServeConfig.spec_depth < 0), greedy sampling (speculative
+        verification is an argmax-chain identity — under temperature it
+        would change the sampling distribution), and non-MoE (capacity
+        groups route by token-group length, so a multi-token step would
+        route differently than sequential decode and break bit-identity)."""
+        return (self._paged and self.cfg.spec_depth < 0
+                and self.cfg.temperature <= 0
+                and not self.model.cfg.n_experts)
+
+    def spec_depth_for(self, plan: RegionPlan) -> int:
+        """spec_depth resolution, mirroring :meth:`page_size`: an explicit
+        ServeConfig value pins it; in auto mode the plan's attn-region knob
+        (the tuner/PlanDecider channel) decides; unset means off."""
+        if self.cfg.temperature > 0 or self.model.cfg.n_experts:
+            return 0
+        if self.cfg.spec_depth >= 0:
+            return self.cfg.spec_depth
+        return max(plan.config_for("layer0/attn").spec_depth, 0)
+
     def _use_paged(self) -> bool:
         if self.cfg.paged == "off":
             return False
@@ -283,30 +374,27 @@ class Engine:
             self._pool = SlotKVPool(self._slot_cache_avals(),
                                     self.cfg.max_slots)
             self._build_step = self._build_pool_step
-        self._pool_step = self._build_step(self.plan)
-        self._pool_steps[self._step_cache_key(self.plan)] = self._pool_step
+        self._pool_step, self._spec_depth = self._build_step(self.plan)
+        self._pool_steps[self._step_cache_key(self.plan)] = (
+            self._pool_step, self._spec_depth)
         if self.dtree is not None and self.cfg.autoplan:
             from repro.core import counters as counters_mod
             self._pool_rc = counters_mod.collect(self._pool_step)
 
     def _sample_pool(self, logits, active, key, temp):
-        """Shared pool-step sampler with the inactive-slot mask: freed (or
-        mid-prefill) slots decode the null page, so their logits are
-        garbage and may be non-finite — zero them before the sampler so
-        NaNs never propagate into categorical(), and pin their sampled
-        token to 0 so downstream state is occupancy-independent."""
+        """Pool-step sampling via the shared :func:`sample_rows`, with the
+        inactive-slot mask: freed (or mid-prefill) slots decode the null
+        page, so their logits are garbage and may be non-finite — zero
+        them before the sampler so NaNs never propagate into
+        categorical(), and pin their sampled token to 0 so downstream
+        state is occupancy-independent."""
         logits = jnp.where(active[:, None], logits, 0.0)
-        if temp <= 0:
-            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        else:
-            keys = jax.random.split(key, logits.shape[0])
-            nxt = jax.vmap(
-                lambda k, l: jax.random.categorical(k, l / temp))(
-                    keys, logits).astype(jnp.int32)
-        return jnp.where(active, nxt, 0)
+        return jnp.where(active, sample_rows(logits, key, temp), 0)
 
     def _build_pool_step(self, plan: RegionPlan):
-        """AOT-compile one decode+sample step over the whole slot pool."""
+        """AOT-compile one decode+sample step over the whole slot pool.
+        Returns (compiled, spec_depth=0) — the slot pool (recurrent state /
+        rings) has no multi-token rollback, so it never speculates."""
         model, temp = self.model, self.cfg.temperature
         sample = self._sample_pool
 
@@ -316,31 +404,43 @@ class Engine:
                                                  tok[None, None], plan)
                 return logits[0, -1, :].astype(jnp.float32), new_cache
             logits, pool = jax.vmap(one)(pool, tokens)
-            return sample(logits, active, key, temp), pool
+            return sample(logits, active, key, temp)[:, None], pool
 
         B = self._pool.n_slots
         return jax.jit(step, donate_argnums=(1,)).lower(
             self.params, self._pool.pool, jnp.zeros((B,), jnp.int32),
-            jnp.zeros((B,), jnp.bool_), jax.random.PRNGKey(0)).compile()
+            jnp.zeros((B,), jnp.bool_), jax.random.PRNGKey(0)).compile(), 0
 
     def _build_paged_step(self, plan: RegionPlan):
-        """AOT-compile one decode+sample step over the paged pool: natively
-        batched over slots, K/V gathered through the block tables."""
+        """AOT-compile one decode(+verify)+sample step over the paged pool:
+        natively batched over slots, K/V gathered through the block tables.
+
+        The plan's resolved ``spec_depth`` D sets the step's fixed query
+        width S = D+1: tokens (B, S) carry each slot's pending token
+        followed by its drafted continuation, and the returned (B, S)
+        token grid is the argmax chain the host's acceptance walk compares
+        the drafts against.  D=0 degenerates to the plain one-token step.
+        Returns (compiled, D).
+        """
         model, temp = self.model, self.cfg.temperature
         sample = self._sample_pool
+        depth = self.spec_depth_for(plan)
+        S = depth + 1
 
         def step(params, pages, tokens, block_tables, lengths, active, key):
             logits, pages = model.paged_decode(
-                params, pages, tokens[:, None], block_tables, lengths, plan)
-            logits = logits[:, -1, :].astype(jnp.float32)
-            return sample(logits, active, key, temp), pages
+                params, pages, tokens, block_tables, lengths, plan)
+            B, S_, V = logits.shape
+            flat = logits.astype(jnp.float32).reshape(B * S_, V)
+            act = jnp.repeat(active, S_)
+            return sample(flat, act, key, temp).reshape(B, S_), pages
 
         pool = self._pool
         B, MP = pool.n_slots, pool.max_pages_per_slot
         return jax.jit(step, donate_argnums=(1,)).lower(
-            self.params, pool.pages, jnp.zeros((B,), jnp.int32),
+            self.params, pool.pages, jnp.zeros((B, S), jnp.int32),
             jnp.zeros((B, MP), jnp.int32), jnp.zeros((B,), jnp.int32),
-            jnp.zeros((B,), jnp.bool_), jax.random.PRNGKey(0)).compile()
+            jnp.zeros((B,), jnp.bool_), jax.random.PRNGKey(0)).compile(), depth
 
     def _chunk_fn(self):
         """Jitted paged prefill-chunk step (pages donated; the block-table
@@ -390,7 +490,7 @@ class Engine:
         """On load-bucket changes, re-pick the decode plan via the dtree."""
         if self._pool_rc is None:
             return
-        bucket = 1 << max(0, n_active - 1).bit_length()   # next power of two
+        bucket = load_bucket(n_active)
         if bucket == self._load_bucket:
             return
         self._load_bucket = bucket
@@ -401,19 +501,22 @@ class Engine:
         key = self._step_cache_key(plan)
         if key not in self._pool_steps:
             self._pool_steps[key] = self._build_step(plan)
-        self._pool_step = self._pool_steps[key]
+        self._pool_step, self._spec_depth = self._pool_steps[key]
         self.decisions_log.append((n_active, decisions))
 
-    @staticmethod
-    def _step_cache_key(plan: RegionPlan) -> str:
+    def _step_cache_key(self, plan: RegionPlan) -> str:
         """Compiled pool steps are cached by the plan's *step-affecting*
         content: pool-layout-only knobs (page_size — fixed at pool build)
-        are stripped, so a dtree decision that couldn't change the
+        are stripped, and spec_depth is stripped whenever the knob isn't
+        live (pinned by ServeConfig, temperature sampling, MoE, or the
+        slot pool), so a dtree decision that couldn't change the
         executable never triggers a recompile stall mid-trace."""
         import json as _json
         raw = _json.loads(plan.to_json())
         for rc in raw.get("regions", {}).values():
             rc.pop("page_size", None)
+            if not self._spec_knob_live():
+                rc.pop("spec_depth", None)
         return _json.dumps(raw, sort_keys=True)
 
     def _validate(self, req: Request):
@@ -459,35 +562,49 @@ class Engine:
         sched.sort_queue()
 
         if self._paged:
-            steps = self._serve_paged(sched)
+            res = self._serve_paged(sched)
         else:
-            steps = self._serve_slots(sched)
+            res = self._serve_slots(sched)
 
-        return {
+        out = {
             "requests": list(requests),
             "stats": summarize(requests),
-            "steps": steps,
             "decisions": list(self.decisions_log[log_start:]),
         }
+        out.update(res)
+        return out
 
-    def _finish_tokens(self, sched: Scheduler, toks_np, pending, active, t,
-                       on_complete):
-        """Shared post-step bookkeeping: record each active slot's sampled
-        token, complete on budget/EOS, and release its memory."""
+    def _commit_tokens(self, sched: Scheduler, out_np, n_cand, pending,
+                       active, t, on_complete) -> dict:
+        """Shared post-step bookkeeping for both pools: walk each active
+        slot's verified token chain ``out_np[slot, :n_cand[slot]]`` in
+        order, recording tokens until the budget or EOS cuts the chain,
+        then complete and release.  The plain one-token step is the
+        n_cand=1 case.  Returns {slot: tokens consumed this step}."""
+        consumed: dict[int, int] = {}
         for slot in list(sched.active):
             req = sched.active[slot]
-            tok = int(toks_np[slot])
-            if not req.out_tokens:
-                req.t_first = t
-            req.out_tokens.append(tok)
-            pending[slot] = tok
             eos = req.eos_id if req.eos_id is not None else self.cfg.eos_id
-            if len(req.out_tokens) >= req.max_new_tokens or tok == eos:
+            c, done = 0, False
+            for i in range(n_cand[slot]):
+                tok = int(out_np[slot, i])
+                if not req.out_tokens:
+                    req.t_first = t
+                req.out_tokens.append(tok)
+                c += 1
+                if len(req.out_tokens) >= req.max_new_tokens or tok == eos:
+                    done = True
+                    break
+            consumed[slot] = c
+            if done:
                 sched.complete(req, t)
                 active[slot] = False
                 on_complete(slot)
+            else:
+                pending[slot] = int(out_np[slot, c - 1])
+        return consumed
 
-    def _serve_slots(self, sched: Scheduler) -> int:
+    def _serve_slots(self, sched: Scheduler) -> dict:
         """The slot-pool loop: whole-prompt prefill on admission, vmapped
         decode over whole-cache slots."""
         pool = self._pool
@@ -524,11 +641,12 @@ class Engine:
                 self.params, pool.pool, jnp.asarray(pending),
                 jnp.asarray(active), sub)
             steps += 1
-            self._finish_tokens(sched, np.asarray(toks), pending, active,
-                                now(), pool.free)
-        return steps
+            self._commit_tokens(sched, np.asarray(toks),
+                                np.ones((pool.n_slots,), np.int32),
+                                pending, active, now(), pool.free)
+        return {"steps": steps}
 
-    def _serve_paged(self, sched: Scheduler) -> int:
+    def _serve_paged(self, sched: Scheduler) -> dict:
         """The paged-pool loop: reservation-based admission, prompt prefill
         in chunks interleaved with pool decode steps.
 
@@ -539,6 +657,16 @@ class Engine:
         slot path suffers).  Decode-step inputs are masked per step: only
         DECODE slots expose their block table and length, so mid-prefill
         slots can never be written by the decode scatter.
+
+        When the current plan's ``spec_depth`` D is positive, every step
+        runs draft -> verify -> commit/rollback: :func:`draft_ngram`
+        proposes D tokens per slot from its own history, the fixed-shape
+        verify step scores pending+drafts with D+1 queries, and the
+        longest drafted prefix matching the verify argmax chain commits
+        (up to D+1 tokens per slot per step, never fewer than the 1 the
+        plain step yields); the rejected tail is rolled back by pure
+        length truncation — no page churn, greedy tokens bit-identical to
+        the non-speculative path.
         """
         pool = self._pool
         B = pool.n_slots
@@ -549,6 +677,17 @@ class Engine:
         t0 = time.perf_counter()
         now = lambda: time.perf_counter() - t0  # noqa: E731
         steps = 0
+        committed_total = 0                 # tokens committed by decode steps
+        slot_steps = 0                      # sum of active slots over steps
+        max_depth = 0                       # deepest speculation actually run
+        # the DECODE-masked block tables change only when pool composition
+        # changes (admission / completion), not every step — cache the
+        # device array instead of re-uploading it per step
+        bt_dev = {"arr": None, "dirty": True}
+
+        def release_slot(slot):
+            pool.release(slot)
+            bt_dev["dirty"] = True
 
         def admit_ready(t):
             while True:
@@ -566,6 +705,7 @@ class Engine:
                     pending[slot] = int(req.prompt[-1])
                     sched.start_decode(req)
                     active[slot] = True
+                    bt_dev["dirty"] = True
                 else:
                     prefills.append(req)
 
@@ -601,6 +741,7 @@ class Engine:
                     pending[slot] = int(req.prompt[-1])
                     sched.start_decode(req)
                     active[slot] = True
+                    bt_dev["dirty"] = True
                     prefills.pop(0)
 
             if not sched.active:
@@ -615,16 +756,59 @@ class Engine:
                 continue
 
             self._maybe_replan(len(sched.active))
+            D = self._spec_depth
+            S = D + 1
+            max_depth = max(max_depth, D)
+            toks_in = np.zeros((B, S), np.int32)
+            toks_in[:, 0] = pending
+            if D:
+                for slot, req in sched.active.items():
+                    toks_in[slot, 1:] = draft_ngram(req.token_history(), D)
             key, sub = jax.random.split(key)
             # expose only DECODE slots to the step (null page otherwise)
-            toks, pool.pages = self._pool_step(
-                self.params, pool.pages, jnp.asarray(pending),
-                jnp.asarray(pool.block_tables * active[:, None]),
-                jnp.asarray(pool.lengths * active),
-                jnp.asarray(active), sub)
+            if bt_dev["dirty"]:
+                bt_dev["arr"] = jnp.asarray(
+                    pool.block_tables * active[:, None])
+                bt_dev["act"] = jnp.asarray(active)
+                bt_dev["dirty"] = False
+            out, pool.pages = self._pool_step(
+                self.params, pool.pages, jnp.asarray(toks_in),
+                bt_dev["arr"], jnp.asarray(pool.lengths * active),
+                bt_dev["act"], sub)
             steps += 1
-            for slot in sched.active:       # this step wrote one token each
-                pool.advance(slot, 1)
-            self._finish_tokens(sched, np.asarray(toks), pending, active,
-                                now(), pool.release)
-        return steps
+            out_np = np.asarray(out)
+
+            # acceptance walk: draft i is valid iff it equals the verify
+            # step's argmax after consuming draft i-1 (and every earlier
+            # draft held) — the longest such prefix commits
+            n_cand = np.ones((B,), np.int32)
+            written = {}
+            slot_steps += len(sched.active)
+            for slot in sched.active:
+                len0 = int(pool.lengths[slot])
+                # rows past the reach of the slot's *reserved* pages went
+                # to the null page; their logits are garbage, so cap
+                # acceptance before them
+                written[slot] = min(S, pool.reserved_tokens(slot) - len0)
+                pool.advance(slot, written[slot])
+                a = 0
+                while (a < min(D, written[slot] - 1)
+                       and toks_in[slot, a + 1] == out_np[slot, a]):
+                    a += 1
+                n_cand[slot] = a + 1
+            consumed = self._commit_tokens(sched, out_np, n_cand, pending,
+                                           active, now(), release_slot)
+            committed_total += sum(consumed.values())
+            for slot, c in consumed.items():
+                if slot in sched.active:    # finished slots already released
+                    pool.rollback(slot, written[slot] - c)
+        return {"steps": steps,
+                "spec": {"committed_tokens": committed_total,
+                         "slot_steps": slot_steps,
+                         "max_depth": max_depth,
+                         # accepted drafts = tokens beyond the one each
+                         # active slot's step commits regardless
+                         "accepted_drafts":
+                             committed_total - slot_steps,
+                         "tokens_per_step":
+                             committed_total / max(steps, 1)}}

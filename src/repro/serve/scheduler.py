@@ -57,6 +57,16 @@ class Request:
         if self.max_new_tokens < 1:
             raise ValueError(f"request {self.rid}: max_new_tokens < 1")
 
+    def token_history(self) -> np.ndarray:
+        """Every token the request has committed so far (prompt followed by
+        generated output) — the draft corpus for self-speculative n-gram
+        lookup.  The last entry is the engine's pending token: committed,
+        but its K/V row not yet written."""
+        if not self.out_tokens:
+            return self.prompt
+        return np.concatenate(
+            [self.prompt, np.asarray(self.out_tokens, np.int32)])
+
 
 class Scheduler:
     """FIFO admission queue + active-set tracking."""

@@ -71,6 +71,54 @@ def test_paged_attention(ps, MP, bk, key):
                                rtol=1e-5, atol=1e-5)
 
 
+@pytest.mark.parametrize("ps,MP,S,bk", [(8, 4, 3, 0), (8, 4, 5, 4),
+                                        (16, 3, 2, 8), (16, 3, 4, 16)])
+def test_paged_attention_multiquery(ps, MP, S, bk, key):
+    """Multi-query (speculative verify) paged kernel vs the dense-gather
+    oracle: S queries per row share the K/V DMA under the staircase mask
+    (query s sees lengths + s positions).  Random non-aliasing block
+    tables, ragged lengths, one zero-length inactive row (garbage by
+    contract, skipped)."""
+    B, KVH, G, D = 3, 2, 3, 32
+    P = 1 + B * MP                        # page 0 is the null sink
+    ks = jax.random.split(key, 3)
+    q = (jax.random.normal(ks[0], (B, S, KVH, G, D)) * 0.5).astype(jnp.float32)
+    kp = (jax.random.normal(ks[1], (P, ps, KVH, D)) * 0.5).astype(jnp.float32)
+    vp = (jax.random.normal(ks[2], (P, ps, KVH, D)) * 0.5).astype(jnp.float32)
+    rng = np.random.default_rng(1)
+    perm = rng.permutation(np.arange(1, P))
+    bt = np.zeros((B, MP), np.int32)
+    # query S-1 must stay within the block table: length + S - 1 <= MP*ps
+    lengths = np.array([ps * MP - (S - 1), ps + 2, 0], np.int32)[:B]
+    used = 0
+    for b in range(B):
+        n = -(-int(lengths[b] + S - 1) // ps) if lengths[b] else 0
+        bt[b, :n] = perm[used:used + n]
+        used += n
+    bt, lengths = jnp.asarray(bt), jnp.asarray(lengths)
+    out = ops.paged_attention_mq(q, kp, vp, bt, lengths, block_k=bk)
+    want = ref.paged_attention_mq(q, kp, vp, bt, lengths)
+    act = np.asarray(lengths) > 0
+    np.testing.assert_allclose(np.asarray(out)[act], np.asarray(want)[act],
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_paged_attention_mq_reduces_to_single_query(key):
+    """The S=1 multi-query kernel is exactly the single-query kernel."""
+    B, KVH, G, D, ps, MP = 2, 2, 2, 16, 8, 3
+    P = 1 + B * MP
+    ks = jax.random.split(key, 3)
+    q = (jax.random.normal(ks[0], (B, KVH, G, D)) * 0.5).astype(jnp.float32)
+    kp = (jax.random.normal(ks[1], (P, ps, KVH, D)) * 0.5).astype(jnp.float32)
+    vp = (jax.random.normal(ks[2], (P, ps, KVH, D)) * 0.5).astype(jnp.float32)
+    bt = jnp.asarray(np.arange(1, 1 + B * MP).reshape(B, MP), jnp.int32)
+    lengths = jnp.asarray([ps * MP, 5], jnp.int32)
+    single = ops.paged_attention(q, kp, vp, bt, lengths)
+    multi = ops.paged_attention_mq(q[:, None], kp, vp, bt, lengths)[:, 0]
+    np.testing.assert_allclose(np.asarray(single), np.asarray(multi),
+                               rtol=1e-6, atol=1e-6)
+
+
 @pytest.mark.parametrize("T,N,bt", [(64, 16, 32), (128, 32, 128), (96, 8, 32)])
 def test_wkv_kernel(T, N, bt, key):
     B, H = 2, 3

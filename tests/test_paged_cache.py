@@ -120,6 +120,70 @@ def test_pool_admit_release_roundtrip(seq):
     assert (pool.block_tables == 0).all()
 
 
+@settings(max_examples=20)
+@given(ops=st.lists(st.integers(min_value=0, max_value=9),
+                    min_size=1, max_size=40))
+def test_pool_multi_token_append_rollback_properties(ops):
+    """Random admit / multi-token advance / rollback / release
+    interleavings (the speculative decode lifecycle): page conservation
+    holds at every step, block tables never alias, lengths never exceed
+    the block table's reach, and rollback — being pure length bookkeeping
+    — leaves the allocator's high-water mark untouched."""
+    ps, n_slots, n_pages = 4, 3, 13
+    avals = {"k": jax.ShapeDtypeStruct((n_pages, ps, 1, 2), jnp.float32)}
+    pool = PagedKVPool(avals, n_slots, ps, n_pages, max_pages_per_slot=4)
+    cap = 4 * ps
+    rng = np.random.default_rng(sum(ops) * 131 + len(ops))
+    held: list[int] = []
+    for op in ops:
+        if op <= 3:                       # admit a new request
+            slot = pool.admit(int(rng.integers(1, cap + 1)))
+            if slot is not None:
+                held.append(slot)
+        elif op <= 6 and held:            # speculative multi-token append
+            slot = int(rng.choice(held))
+            room = cap - int(pool.lengths[slot])
+            n = int(rng.integers(0, room + 1))
+            pool.advance(slot, n)
+        elif op <= 8 and held:            # roll back a rejected tail
+            slot = int(rng.choice(held))
+            hw = pool.allocator.high_water
+            n = int(rng.integers(0, int(pool.lengths[slot]) + 1))
+            pool.rollback(slot, n)
+            assert pool.allocator.high_water == hw, \
+                "rollback touched the allocator"
+        elif held:                        # release a finished request
+            slot = held.pop(int(rng.integers(len(held))))
+            pool.release(slot)
+        pool.allocator.check_invariants()
+        rows = {s: set(pool.block_tables[s][pool.block_tables[s] > 0])
+                for s in held}
+        for a in held:
+            assert int(pool.lengths[a]) <= cap
+            for b in held:
+                if a < b:
+                    assert not rows[a] & rows[b], "block tables alias"
+    for slot in held:
+        pool.release(slot)
+    assert pool.allocator.n_live == 0 and pool.n_free == n_slots
+
+
+def test_pool_rollback_guards():
+    avals = {"k": jax.ShapeDtypeStruct((9, 4, 1, 2), jnp.float32)}
+    pool = PagedKVPool(avals, 2, 4, 9, max_pages_per_slot=2)
+    slot = pool.admit(8)
+    pool.advance(slot, 5)
+    with pytest.raises(ValueError):
+        pool.rollback(slot, 6)            # more than is written
+    with pytest.raises(ValueError):
+        pool.rollback(slot, -1)
+    with pytest.raises(ValueError):
+        pool.rollback(1 - slot, 1)        # inactive slot
+    pool.rollback(slot, 5)
+    assert int(pool.lengths[slot]) == 0
+    pool.release(slot)
+
+
 def test_pool_advance_overflow_guarded():
     avals = {"k": jax.ShapeDtypeStruct((9, 4, 1, 2), jnp.float32)}
     pool = PagedKVPool(avals, 2, 4, 9, max_pages_per_slot=2)

@@ -1,0 +1,122 @@
+"""PlanDecider occupancy scaling and load-bucket replan triggering, unit
+tested straight on ``Counters.scaled`` -> decision — no engine, no model.
+
+The serve-time loop is: measured region counters, scaled by the pool's
+occupancy fraction, featurised, classified by the tuner-trained tree, the
+predicted candidate overlaid on the plan.  These tests pin each stage."""
+import numpy as np
+
+from repro.core.counters import Counters
+from repro.core.dtree import DecisionTree, features
+from repro.core.policy import null_plan
+from repro.serve.engine import PlanDecider, load_bucket
+
+
+class _RC:
+    """RegionCounters stand-in (regions dict + top_regions only)."""
+    def __init__(self, regions):
+        self.regions = regions
+
+    def top_regions(self, key, n):
+        items = [(r, getattr(c, key)) for r, c in self.regions.items()]
+        return sorted(items, key=lambda kv: -kv[1])[:n]
+
+
+# ---------------------------------------------------------------------------
+# Counters.scaled — the occupancy attribution primitive
+# ---------------------------------------------------------------------------
+
+
+def test_counters_scaled_is_proportional_and_preserves_ops():
+    c = Counters(flops=8e9, bytes=2e9, collective_bytes=1e8, link_bytes=5e7,
+                 collective_ops=3, ops=17)
+    half = c.scaled(0.5)
+    assert half.flops == 4e9 and half.bytes == 1e9
+    assert half.collective_bytes == 5e7 and half.link_bytes == 2.5e7
+    assert half.collective_ops == 3 and half.ops == 17   # structure, not work
+    # arithmetic intensity is occupancy-invariant; log-magnitudes shift
+    f_full, f_half = features(c), features(half)
+    assert np.isclose(f_full[4], f_half[4], rtol=1e-6)   # AI unchanged
+    assert f_half[0] < f_full[0]                         # log_flops drops
+
+
+def _spec_tree():
+    """A tree shaped like the serving benchmark's: low occupancy (scaled
+    counters look small / memory-ish) -> deep speculation, high -> shallow."""
+    base = Counters(flops=8e9, bytes=2e9)
+    X, y = [], []
+    for frac, label in ((0.125, "spec4"), (0.25, "spec4"),
+                        (0.5, "spec2"), (1.0, "spec2")):
+        X.append(features(base.scaled(frac)))
+        y.append(label)
+    return DecisionTree(max_depth=3).fit(np.stack(X), y), base
+
+
+def test_occupancy_scaling_switches_spec_depth_decision():
+    """The same measured step flips the spec_depth candidate purely through
+    the load_frac the decider scales the counters by."""
+    tree, base = _spec_tree()
+    rc = _RC({"layer0/attn": base})
+    dec = PlanDecider(tree, kind="decode")
+    low, dlow = dec.decide(rc, null_plan(), load_frac=0.25)
+    high, dhigh = dec.decide(rc, null_plan(), load_frac=1.0)
+    assert dict(dlow)["layer/attn"] == "spec4"
+    assert dict(dhigh)["layer/attn"] == "spec2"
+    assert low.config_for("layer3/attn").spec_depth == 4
+    assert high.config_for("layer3/attn").spec_depth == 2
+
+
+def test_spec_candidate_not_applied_to_non_attn_regions():
+    tree, base = _spec_tree()
+    rc = _RC({"layer0/mlp": base})
+    dec = PlanDecider(tree, kind="decode")
+    plan, decisions = dec.decide(rc, null_plan(), load_frac=0.25)
+    # the tree votes, but spec candidates only apply to attention regions
+    assert dict(decisions)["layer/mlp"].startswith("spec")
+    assert plan.config_for("layer0/mlp").spec_depth == -1   # knob unset
+
+
+# ---------------------------------------------------------------------------
+# Load-bucket replan triggering
+# ---------------------------------------------------------------------------
+
+
+def test_load_bucket_is_next_power_of_two():
+    assert [load_bucket(n) for n in range(9)] == [1, 1, 2, 4, 4, 8, 8, 8, 8]
+
+
+def test_load_bucket_triggers_replan_only_on_bucket_change():
+    """Replay an occupancy trace the way Engine._maybe_replan gates on it:
+    a decision is re-taken exactly when the bucket changes, so plan churn
+    tracks load swings logarithmically, not per-request."""
+    trace = [1, 1, 2, 2, 3, 4, 4, 3, 2, 1, 1]
+    last, replans = None, []
+    for n_active in trace:
+        b = load_bucket(n_active)
+        if b != last:
+            replans.append((n_active, b))
+            last = b
+    assert replans == [(1, 1), (2, 2), (3, 4), (2, 2), (1, 1)]
+    # ramping within a bucket (3 -> 4 slots) triggered nothing
+    assert all(n != 4 for n, _ in replans)
+
+
+def test_bucketed_decisions_follow_occupancy_over_a_trace():
+    """End-to-end over a synthetic occupancy swing: decisions taken at each
+    bucket change pick deeper speculation at the trough than at the peak."""
+    tree, base = _spec_tree()
+    rc = _RC({"layer0/attn": base})
+    dec = PlanDecider(tree, kind="decode")
+    n_slots = 8
+    picked = {}
+    last = None
+    for n_active in [1, 2, 5, 8, 5, 2, 1]:
+        b = load_bucket(n_active)
+        if b == last:
+            continue
+        last = b
+        frac = min(b, n_slots) / n_slots
+        _, decisions = dec.decide(rc, null_plan(), load_frac=frac)
+        picked[b] = dict(decisions)["layer/attn"]
+    assert picked[1] == "spec4" and picked[2] == "spec4"
+    assert picked[8] == "spec2"
