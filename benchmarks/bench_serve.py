@@ -25,6 +25,17 @@ features scaled by occupancy, exactly what the serve-time ``PlanDecider``
 sees) votes ``spec4`` on low-occupancy buckets and ``spec2`` otherwise, so
 the benchmark also records the decider switching depth across load buckets.
 
+The **online-retrain rows** replay a *drifting* trace (the prompt-length /
+generation mix shifts mid-run to a long decode-bound tail) against two
+engines holding the same frozen "offline" tree — one trained without the
+serve-only speculation classes the offline search can never trial, so it
+always votes ``spec0``.  The frozen engine is stuck with it; the online
+engine (``online_retrain``) taps its own measured counters + tok/s rewards
+into a corpus, explores the spec candidates epsilon-greedily, retrains and
+hot-swaps the tree mid-trace — ``BENCH_serve.json`` records the retrain
+count, explore fraction, post-swap tok/s delta and the online-vs-offline
+ratio CI gates on.
+
 Row format: ``name,us_per_token,tok_per_s`` (plus derived ratio rows).
 After a run, :data:`json_summary` holds the machine-readable record
 (tok/s, latency percentiles, TTFT for every path, HBM high-water,
@@ -97,6 +108,53 @@ def _inflight_at_fixed_hbm(paged_pool: PagedKVPool, slot_hbm: int,
         if n <= paged_pool.max_pages_per_slot and sim.alloc(i, n) is not None:
             admitted += 1
     return SLOTS, admitted
+
+
+def _drift_trace(vocab: int, n_req: int = N_REQ) -> list[Request]:
+    """Drifting workload: the prompt/generation mix shifts mid-run from
+    short prompts + short answers to long prompts + a long decode-bound
+    tail (the regime where deep speculation pays and a frozen spec0 tree
+    leaves throughput on the table)."""
+    rng = np.random.default_rng(7)
+    reqs = []
+    for i in range(n_req):
+        plen, gen = (8, 10) if i < n_req // 2 else (32, 56)
+        reqs.append(Request(rid=i,
+                            prompt=rng.integers(0, vocab, plen).astype(
+                                np.int32),
+                            max_new_tokens=gen, arrival_s=GAP_S * i))
+    return reqs
+
+
+def _frozen_offline_dtree(rc):
+    """The tree a purely-offline pipeline would ship: trained on measured
+    attention features, but the offline search skips ``serve_only``
+    candidates, so its corpus only ever saw ``spec0`` — it can never vote
+    for speculation no matter what load it observes."""
+    from repro.core.dtree import DecisionTree
+    from repro.core.dtree import features as dt_features
+    attn = [c for r, c in rc.regions.items() if r and "attn" in r]
+    X = [dt_features(c.scaled(frac))
+         for c in (attn or [c for r, c in rc.regions.items() if r])
+         for frac in (0.25, 0.5, 1.0)]
+    return DecisionTree(max_depth=3).fit(np.stack(X), ["spec0"] * len(X))
+
+
+def _prewarm_depths(eng: Engine, depths=(0, 2, 4)):
+    """Compile the pool step for every speculation depth the online loop
+    can reach, so retrain/explore swaps mid-trace never pay a compile."""
+    import copy
+    import dataclasses
+    from repro.core.policy import RegionConfig
+    eng._ensure_pool()
+    for d in depths:
+        plan = copy.deepcopy(eng.plan)
+        base = plan.region_configs.get("layer/attn", RegionConfig())
+        plan.region_configs["layer/attn"] = dataclasses.replace(
+            base, spec_depth=d)
+        key = eng._step_cache_key(plan)
+        if key not in eng._pool_steps:
+            eng._pool_steps[key] = eng._build_step(plan)
 
 
 def _spec_dtree(engine: Engine):
@@ -223,6 +281,69 @@ def run(smoke: bool = False):
     yield (f"serve_speedup,{paged_tok_s / max(static_tok_s, 1e-9):.2f},"
            f"continuous_over_static")
 
+    # -- online retrain on a drifting trace: frozen offline tree vs the
+    # -- measure->corpus->train->decide loop closed inside the engine
+    drift = _drift_trace(cfg.vocab_size, n_req)
+    drift_max_len = 32 + 56 + 1
+    # explore_budget is sized to be spent entirely during the burn-in trace
+    # (eps=1.0 there), so the measured reps run pure exploitation on the
+    # learned tree — epsilon-greedy with a hard budget is exactly the
+    # production shape: pay for discovery once, then serve greedily
+    online_eng = Engine(model, params, serve_cfg=ServeConfig(
+        max_len=drift_max_len, max_slots=SLOTS, page_size=PAGE,
+        prefill_chunk=CHUNK, spec_depth=-1, online_retrain=True,
+        retrain_interval=6, explore_eps=0.3, explore_budget=8))
+    online_eng._ensure_pool()
+    offline_tree = _frozen_offline_dtree(online_eng._pool_rc)
+    offline_eng = Engine(model, params, serve_cfg=ServeConfig(
+        max_len=drift_max_len, max_slots=SLOTS, page_size=PAGE,
+        prefill_chunk=CHUNK, spec_depth=-1))
+    offline_eng.dtree = offline_tree
+    # warm: compile every reachable depth, then run both engines once so
+    # first-execution overhead never lands inside a measured (or corpus-
+    # rewarded) span — a cold spec step would teach the tree that
+    # speculation is slow.  The online engine's warm-up doubles as its
+    # burn-in traffic: exploration is cranked to visit every depth, and the
+    # corpus/tree it learns PERSISTS into the measured reps (an online
+    # autotuner in production never restarts its corpus per trace — the
+    # frozen engine's handicap is exactly that it can never learn at all)
+    _prewarm_depths(online_eng)
+    online_eng.explorer.eps = 1.0        # visit every depth during warm-up
+    online_eng.serve(_reset(drift))
+    online_eng.explorer.eps = online_eng.cfg.explore_eps
+    offline_eng.serve(_reset(drift))
+
+    best_off = None
+    for _ in range(reps):
+        reqs = _reset(drift)
+        r = offline_eng.serve(reqs)
+        if best_off is None or r["stats"]["tok_per_s"] > best_off["stats"][
+                "tok_per_s"]:
+            best_off = r
+    offline_tok_s = best_off["stats"]["tok_per_s"]
+
+    best_on = None
+    for _ in range(reps):
+        reqs = _reset(drift)
+        r = online_eng.serve(reqs)
+        if best_on is None or r["stats"]["tok_per_s"] > best_on["stats"][
+                "tok_per_s"]:
+            best_on = r
+    online_tok_s = best_on["stats"]["tok_per_s"]
+    at = online_eng.autotune_summary()   # cumulative: burn-in + measured
+
+    yield (f"serve_offline_tree,{1e6 / max(offline_tok_s, 1e-9):.1f},"
+           f"{offline_tok_s:.1f}")
+    yield (f"serve_online_tree,{1e6 / max(online_tok_s, 1e-9):.1f},"
+           f"{online_tok_s:.1f}")
+    yield (f"serve_online_vs_offline,"
+           f"{online_tok_s / max(offline_tok_s, 1e-9):.2f},"
+           f"retrains={at['retrains']}_swaps={at['swaps']}_"
+           f"explore_frac={at['explore_fraction']:.2f}")
+    yield (f"serve_online_post_swap_delta,"
+           f"{at['post_swap_tok_s_delta']:.1f},"
+           f"pre={at['pre_swap_tok_s']:.1f}_post={at['post_swap_tok_s']:.1f}")
+
     json_summary = {
         "arch": ARCH, "slots": SLOTS, "page_size": PAGE,
         "prefill_chunk": CHUNK, "n_requests": n_req, "smoke": smoke,
@@ -259,6 +380,27 @@ def run(smoke: bool = False):
         },
         "static": {"tok_per_s": static_tok_s,
                    "ttft_p50_s": st["ttft_p50_s"]},
+        "drift": {
+            # frozen offline tree vs online retrain on the drifting trace
+            "offline": {
+                "tok_per_s": offline_tok_s,
+                "latency_p50_s": best_off["stats"]["latency_p50_s"],
+                "pool_steps": best_off["steps"],
+            },
+            "online": {
+                "tok_per_s": online_tok_s,
+                "latency_p50_s": best_on["stats"]["latency_p50_s"],
+                "pool_steps": best_on["steps"],
+                "retrains": at["retrains"],
+                "swaps": at["swaps"],
+                "explore_fraction": at["explore_fraction"],
+                "explored": at["explored"],
+                "corpus_entries": at["corpus_entries"],
+                "pre_swap_tok_s": at["pre_swap_tok_s"],
+                "post_swap_tok_s": at["post_swap_tok_s"],
+                "post_swap_tok_s_delta": at["post_swap_tok_s_delta"],
+            },
+        },
         "ratios": {
             "paged_vs_slot_tok_s": paged_tok_s / max(slot_tok_s, 1e-9),
             # the paged *path* as served: the pool's best decode config
@@ -270,6 +412,8 @@ def run(smoke: bool = False):
             "inflight_at_fixed_hbm": paged_cap / slot_cap,
             "continuous_vs_static_tok_s":
                 max(paged_tok_s, spec_tok_s) / max(static_tok_s, 1e-9),
+            "online_vs_offline_tok_s":
+                online_tok_s / max(offline_tok_s, 1e-9),
         },
         "inflight_at_fixed_hbm": {"paged": paged_cap, "slot": slot_cap},
     }

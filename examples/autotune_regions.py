@@ -3,16 +3,17 @@
 Runs the greedy counter-driven tuner on a reduced hybrid model (zamba2:
 SSM + shared-attention + MLP regions have different profiles), prints the
 hypothesis -> measure -> accept/reject log, saves the winning plan to JSON
-(PdtTagger's "config file"), and trains a decision tree from the search
-corpus.
+(PdtTagger's "config file"), trains a decision tree from the search
+corpus, and exports the corpus as JSONL — the serve engine can merge it
+(``launch/serve.py --corpus-in``) and keep refining it online.
 
   PYTHONPATH=src python examples/autotune_regions.py
 """
 import jax
 
+from repro.autotune import Tuner
 from repro.configs.registry import get_config
 from repro.core.policy import RegionPlan
-from repro.core.tuner import autotune, default_candidates
 from repro.models.model import build
 from repro.optim import adamw
 from repro.train import trainer
@@ -36,8 +37,8 @@ def build_step(plan: RegionPlan):
     return jax.jit(step).lower(params, opt, batch)
 
 
-result = autotune(build_step, mesh=None, kind="train", max_iters=4,
-                  verbose=True)
+result = Tuner(kind="train", max_iters=4, verbose=True).autotune(
+    build_step, mesh=None)
 
 print(f"\nbaseline bound: {result.baseline_bound_s*1e3:.2f} ms")
 print(f"tuned bound:    {result.best_bound_s*1e3:.2f} ms "
@@ -58,3 +59,8 @@ tree = result.train_dtree()
 if tree is not None:
     print("decision tree trained on the search corpus "
           f"({len(result.corpus)} samples)")
+
+n = result.to_corpus().save_jsonl("/tmp/tuned_corpus.jsonl")
+print(f"search corpus saved to /tmp/tuned_corpus.jsonl ({n} entries) "
+      "(use: python -m repro.launch.serve --online-retrain "
+      "--corpus-in /tmp/tuned_corpus.jsonl)")

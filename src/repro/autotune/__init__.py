@@ -1,0 +1,38 @@
+"""Autotuning subsystem: the paper's measure -> corpus -> train -> decide
+pipeline as explicit layers, shared by the offline tuner and the serving
+engine.
+
+The paper's flow (instrument / measure / decide / apply) maps onto:
+
+  instrument  repro.core.regions (automatic scope tagging)     [PdtTagger]
+  measure     repro.core.counters (per-region HLO counters)    [libhpm]
+  corpus      repro.autotune.corpus  (append-only observation store)
+  train       repro.autotune.trainer (incremental DecisionTree retraining)
+  explore     repro.autotune.explorer (epsilon-greedy over the candidate menu)
+  decide      repro.autotune.decider  (counters -> tree -> RegionPlan)
+  search      repro.autotune.search   (the offline greedy hypothesis loop)
+  apply       repro.core.policy (RegionPlan / RegionConfig)    [linked library]
+
+Offline, :class:`~repro.autotune.search.Tuner` runs the greedy search and
+emits a corpus of (features, winning-class) pairs.  Online, the serve
+engine taps its own measured step counters and tok/s rewards into the same
+:class:`~repro.autotune.corpus.Corpus`, retrains through
+:class:`~repro.autotune.trainer.OnlineTrainer`, and hot-swaps the tree in
+:class:`~repro.autotune.decider.PlanDecider` — the loop the paper runs
+ahead of time, closed inside the serving hot path.
+"""
+from repro.autotune.candidates import (Candidate, canonical,
+                                       default_candidates, explore_menu)
+from repro.autotune.corpus import Corpus, CorpusEntry
+from repro.autotune.decider import PlanDecider
+from repro.autotune.explorer import EpsilonGreedyExplorer
+from repro.autotune.search import (Iteration, TuneResult, Tuner, autotune,
+                                   compile_evaluator)
+from repro.autotune.trainer import OnlineTrainer, holdout_value
+
+__all__ = [
+    "Candidate", "canonical", "default_candidates", "explore_menu",
+    "Corpus", "CorpusEntry", "PlanDecider", "EpsilonGreedyExplorer",
+    "Iteration", "TuneResult", "Tuner", "autotune", "compile_evaluator",
+    "OnlineTrainer", "holdout_value",
+]

@@ -1,0 +1,100 @@
+"""The action space: named parallelism-config candidates (the "decide"
+stage's vocabulary).
+
+Each :class:`Candidate` is one class label the decision tree can predict —
+the analog of one ``OMP_NUM_THREADS``/scheduling choice in the paper's
+per-region menu.  The offline search trials them by re-lowering; the
+serve-time decider applies them by overlaying their
+:class:`repro.core.policy.RegionConfig` onto the live plan.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+from repro.core.policy import RegionConfig
+
+
+def canonical(region: str) -> str:
+    """layer3/attn -> layer/attn (configs generalise across layer indices)."""
+    return re.sub(r"\d+", "", region)
+
+
+@dataclasses.dataclass
+class Candidate:
+    name: str                      # class label (dtree target)
+    config: RegionConfig
+    applies_to: str = ""           # region-kind filter substring
+    serve_only: bool = False       # knob invisible to the offline evaluator
+                                   # (e.g. spec_depth: it shapes the serve
+                                   # engine's step, not the region graph) —
+                                   # the tuner skips trialling it, but the
+                                   # serve-time PlanDecider can still apply
+                                   # its class
+
+
+def default_candidates(kind: str = "train") -> list[Candidate]:
+    """The action space (the SMT-mode menu of this hardware)."""
+    cands = [
+        # attention sharding alternatives
+        Candidate("attn_tp_heads", RegionConfig(rules={"heads": "model"}),
+                  "attn"),
+        Candidate("attn_cp_seq", RegionConfig(
+            rules={"heads": None, "seq": "model", "kv_heads": None}), "attn"),
+        Candidate("attn_replicated", RegionConfig(
+            rules={"heads": None, "kv_heads": None}), "attn"),
+        # mlp/ff sharding
+        Candidate("ff_tp", RegionConfig(rules={"ff": "model"}), "mlp"),
+        Candidate("ff_dp_only", RegionConfig(rules={"ff": None}), "mlp"),
+        # MoE expert layout
+        Candidate("moe_ep", RegionConfig(rules={"experts": "model",
+                                                "ff": None}), "moe"),
+        Candidate("moe_tp", RegionConfig(rules={"experts": None,
+                                                "ff": "model"}), "moe"),
+        # SSM chunk length (recompute/memory trade)
+        Candidate("ssm_chunk64", RegionConfig(chunk=64), "ssm"),
+        Candidate("ssm_chunk256", RegionConfig(chunk=256), "ssm"),
+        Candidate("ssm_chunk512", RegionConfig(chunk=512), "ssm"),
+        # attention q-block (VMEM/score-matrix trade)
+        Candidate("attn_blockq_1k", RegionConfig(block_q=1024), "attn"),
+        Candidate("attn_blockq_4k", RegionConfig(block_q=4096), "attn"),
+    ]
+    if kind == "train":
+        cands += [
+            Candidate("remat_off", RegionConfig(remat=False), "layer"),
+            Candidate("remat_on", RegionConfig(remat=True), "layer"),
+        ]
+    if kind == "decode":
+        cands += [
+            Candidate("kv_seq_shard", RegionConfig(
+                rules={"kv_seq": "model", "heads": None}), "attn"),
+            Candidate("kv_head_shard", RegionConfig(
+                rules={"kv_seq": None, "kv_heads": "model"}), "attn"),
+            # paged-KV layout granularity (pool rebuild) and the paged
+            # Pallas kernel's inner KV tile (step rebuild only)
+            Candidate("attn_page16", RegionConfig(page_size=16), "attn"),
+            Candidate("attn_page64", RegionConfig(page_size=64), "attn"),
+            Candidate("attn_paged_kernel", RegionConfig(attn_impl="paged"),
+                      "attn"),
+            Candidate("attn_paged_kernel_bk128", RegionConfig(
+                attn_impl="paged", block_k=128), "attn"),
+            # speculative decode depth: deep speculation wins on memory-bound
+            # low-occupancy pools (drafted queries amortise KV traffic),
+            # loses under compute-bound high occupancy (rejected drafts
+            # burn flops) — exactly the workload-dependent knob the
+            # counters-scaled-by-occupancy decider is built to choose
+            Candidate("spec0", RegionConfig(spec_depth=0), "attn",
+                      serve_only=True),
+            Candidate("spec2", RegionConfig(spec_depth=2), "attn",
+                      serve_only=True),
+            Candidate("spec4", RegionConfig(spec_depth=4), "attn",
+                      serve_only=True),
+        ]
+    return cands
+
+
+def explore_menu(kind: str = "decode") -> list[Candidate]:
+    """The serve-time exploration menu: the serve-only candidates the
+    offline evaluator can never trial (it skips ``serve_only`` knobs), so
+    only live traffic can populate their corpus classes."""
+    return [c for c in default_candidates(kind) if c.serve_only]

@@ -1,241 +1,19 @@
-"""The autotuner: per-region parallelism search driven by region counters.
+"""Compatibility shim: the autotuner moved to :mod:`repro.autotune`.
 
-Mirrors the paper's flow end to end:
+The measure -> corpus -> train -> decide pipeline now lives in the
+``repro.autotune`` package (``search.py`` holds the offline greedy loop,
+``corpus.py``/``trainer.py``/``explorer.py``/``decider.py`` the online
+layers the serve engine consumes).  Everything this module used to define
+re-exports from there, so existing imports keep working:
 
-  1. instrument (regions.py — automatic)            [PdtTagger]
-  2. profile per-region counters (counters.py)       [libhpm]
-  3. decide per-region config                        [decision tree / search]
-  4. apply (policy.RegionPlan)                       [linked library]
-
-``autotune`` is a greedy hypothesis-driven loop: profile -> find the dominant
-roofline term and its hottest region -> enumerate legal candidates for that
-region -> napkin-math (predict) each -> evaluate the best predictions by
-re-lowering -> keep the winner -> repeat.  Every iteration is logged as
-hypothesis/before/after (EXPERIMENTS.md §Perf reads these logs).
-
-The search also emits a (features -> winning-class) training corpus for
-:class:`repro.core.dtree.DecisionTree` — the paper's proposed mechanism for
-deciding configs without search at runtime.
+    from repro.core.tuner import Tuner, autotune, default_candidates
 """
-from __future__ import annotations
+from repro.autotune.candidates import (Candidate, canonical,
+                                       default_candidates)
+from repro.autotune.search import (Iteration, TuneResult, Tuner, autotune,
+                                   compile_evaluator)
 
-import copy
-import dataclasses
-import re
-from typing import Callable, Iterable, Optional
-
-import numpy as np
-
-from repro.core import counters as counters_mod
-from repro.core import roofline as roofline_mod
-from repro.core.dtree import DecisionTree, features
-from repro.core.policy import RegionConfig, RegionPlan, default_plan
-
-
-def canonical(region: str) -> str:
-    """layer3/attn -> layer/attn (configs generalise across layer indices)."""
-    return re.sub(r"\d+", "", region)
-
-
-@dataclasses.dataclass
-class Candidate:
-    name: str                      # class label (dtree target)
-    config: RegionConfig
-    applies_to: str = ""           # region-kind filter substring
-    serve_only: bool = False       # knob invisible to the offline evaluator
-                                   # (e.g. spec_depth: it shapes the serve
-                                   # engine's step, not the region graph) —
-                                   # the tuner skips trialling it, but the
-                                   # serve-time PlanDecider can still apply
-                                   # its class
-
-
-def default_candidates(kind: str = "train") -> list[Candidate]:
-    """The action space (the SMT-mode menu of this hardware)."""
-    cands = [
-        # attention sharding alternatives
-        Candidate("attn_tp_heads", RegionConfig(rules={"heads": "model"}),
-                  "attn"),
-        Candidate("attn_cp_seq", RegionConfig(
-            rules={"heads": None, "seq": "model", "kv_heads": None}), "attn"),
-        Candidate("attn_replicated", RegionConfig(
-            rules={"heads": None, "kv_heads": None}), "attn"),
-        # mlp/ff sharding
-        Candidate("ff_tp", RegionConfig(rules={"ff": "model"}), "mlp"),
-        Candidate("ff_dp_only", RegionConfig(rules={"ff": None}), "mlp"),
-        # MoE expert layout
-        Candidate("moe_ep", RegionConfig(rules={"experts": "model",
-                                                "ff": None}), "moe"),
-        Candidate("moe_tp", RegionConfig(rules={"experts": None,
-                                                "ff": "model"}), "moe"),
-        # SSM chunk length (recompute/memory trade)
-        Candidate("ssm_chunk64", RegionConfig(chunk=64), "ssm"),
-        Candidate("ssm_chunk256", RegionConfig(chunk=256), "ssm"),
-        Candidate("ssm_chunk512", RegionConfig(chunk=512), "ssm"),
-        # attention q-block (VMEM/score-matrix trade)
-        Candidate("attn_blockq_1k", RegionConfig(block_q=1024), "attn"),
-        Candidate("attn_blockq_4k", RegionConfig(block_q=4096), "attn"),
-    ]
-    if kind == "train":
-        cands += [
-            Candidate("remat_off", RegionConfig(remat=False), "layer"),
-            Candidate("remat_on", RegionConfig(remat=True), "layer"),
-        ]
-    if kind == "decode":
-        cands += [
-            Candidate("kv_seq_shard", RegionConfig(
-                rules={"kv_seq": "model", "heads": None}), "attn"),
-            Candidate("kv_head_shard", RegionConfig(
-                rules={"kv_seq": None, "kv_heads": "model"}), "attn"),
-            # paged-KV layout granularity (pool rebuild) and the paged
-            # Pallas kernel's inner KV tile (step rebuild only)
-            Candidate("attn_page16", RegionConfig(page_size=16), "attn"),
-            Candidate("attn_page64", RegionConfig(page_size=64), "attn"),
-            Candidate("attn_paged_kernel", RegionConfig(attn_impl="paged"),
-                      "attn"),
-            Candidate("attn_paged_kernel_bk128", RegionConfig(
-                attn_impl="paged", block_k=128), "attn"),
-            # speculative decode depth: deep speculation wins on memory-bound
-            # low-occupancy pools (drafted queries amortise KV traffic),
-            # loses under compute-bound high occupancy (rejected drafts
-            # burn flops) — exactly the workload-dependent knob the
-            # counters-scaled-by-occupancy decider is built to choose
-            Candidate("spec0", RegionConfig(spec_depth=0), "attn",
-                      serve_only=True),
-            Candidate("spec2", RegionConfig(spec_depth=2), "attn",
-                      serve_only=True),
-            Candidate("spec4", RegionConfig(spec_depth=4), "attn",
-                      serve_only=True),
-        ]
-    return cands
-
-
-@dataclasses.dataclass
-class Iteration:
-    step: int
-    region: str
-    term: str
-    hypothesis: str
-    candidate: str
-    before_s: float
-    after_s: float
-    accepted: bool
-    confirmed: bool
-
-
-@dataclasses.dataclass
-class TuneResult:
-    plan: RegionPlan
-    best_bound_s: float
-    baseline_bound_s: float
-    history: list
-    corpus: list                    # (feature_vec, winning_class) pairs
-
-    def train_dtree(self, **kw) -> Optional[DecisionTree]:
-        if len(self.corpus) < 2:
-            return None
-        X = np.stack([f for f, _ in self.corpus])
-        y = [c for _, c in self.corpus]
-        return DecisionTree(**kw).fit(X, y)
-
-
-def compile_evaluator(build_fn: Callable[[RegionPlan], object]):
-    """Default evaluator: lower+compile under a plan, score by roofline bound."""
-    def evaluate(plan: RegionPlan):
-        lowered = build_fn(plan)
-        compiled = lowered.compile()
-        rc = counters_mod.collect(compiled)
-        rl = roofline_mod.from_counters(rc.total)
-        return rl.bound_s, rc, rl
-    return evaluate
-
-
-def _hot_region(rc, term: str) -> Optional[str]:
-    key = {"compute": "flops", "memory": "bytes",
-           "collective": "link_bytes"}[term]
-    top = rc.top_regions(key, 1)
-    return top[0][0] if top else None
-
-
-def autotune(build_fn, mesh, *, kind: str = "train",
-             candidates: Optional[list] = None, max_iters: int = 6,
-             evaluate=None, plan: Optional[RegionPlan] = None,
-             min_gain: float = 0.02, verbose: bool = True) -> TuneResult:
-    candidates = candidates if candidates is not None else default_candidates(kind)
-    evaluate = evaluate or compile_evaluator(build_fn)
-    plan = plan or default_plan(mesh, kind)
-
-    score, rc, rl = evaluate(plan)
-    baseline = score
-    history: list[Iteration] = []
-    corpus: list = []
-    tried: set = set()
-
-    for it in range(max_iters):
-        term = rl.dominant
-        region = _hot_region(rc, term)
-        if region is None:
-            break
-        prefix = canonical(region)
-        region_counters = rc.regions.get(region)
-        feat = features(region_counters) if region_counters else None
-
-        applicable = [c for c in candidates
-                      if c.applies_to in prefix and not c.serve_only
-                      and (prefix, c.name) not in tried]
-        if not applicable:
-            # dominant region exhausted; try the next-hottest region
-            tops = rc.top_regions(
-                {"compute": "flops", "memory": "bytes",
-                 "collective": "link_bytes"}[term], 5)
-            applicable = []
-            for r, _ in tops[1:]:
-                prefix = canonical(r)
-                applicable = [c for c in candidates
-                              if c.applies_to in prefix and not c.serve_only
-                              and (prefix, c.name) not in tried]
-                if applicable:
-                    region = r
-                    break
-            if not applicable:
-                break
-
-        best = None
-        for cand in applicable:
-            tried.add((prefix, cand.name))
-            trial = copy.deepcopy(plan)
-            merged = trial.region_configs.get(prefix, RegionConfig())
-            merged = dataclasses.replace(
-                cand.config,
-                rules={**merged.rules, **cand.config.rules})
-            trial.region_configs[prefix] = merged
-            try:
-                s2, rc2, rl2 = evaluate(trial)
-            except Exception as e:  # illegal/broken candidate: skip
-                if verbose:
-                    print(f"  [tune] {cand.name} on {prefix}: FAILED {e}")
-                continue
-            hypo = (f"{term}-bound at {region}; {cand.name} should cut the "
-                    f"{term} term")
-            accepted = s2 < score * (1 - min_gain)
-            history.append(Iteration(it, prefix, term, hypo, cand.name,
-                                     score, s2, accepted, s2 < score))
-            if verbose:
-                print(f"  [tune] iter{it} {prefix} {cand.name}: "
-                      f"{score*1e3:.1f}ms -> {s2*1e3:.1f}ms "
-                      f"{'ACCEPT' if accepted else 'reject'}")
-            if best is None or s2 < best[0]:
-                best = (s2, rc2, rl2, trial, cand)
-        if best is None:
-            break
-        s2, rc2, rl2, trial, cand = best
-        if feat is not None:
-            corpus.append((feat, cand.name if s2 < score else "keep_default"))
-        if s2 < score * (1 - min_gain):
-            score, rc, rl, plan = s2, rc2, rl2, trial
-        else:
-            break  # no candidate moved the needle; stop
-
-    return TuneResult(plan=plan, best_bound_s=score,
-                      baseline_bound_s=baseline, history=history,
-                      corpus=corpus)
+__all__ = [
+    "Candidate", "canonical", "default_candidates",
+    "Iteration", "TuneResult", "Tuner", "autotune", "compile_evaluator",
+]

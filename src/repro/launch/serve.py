@@ -4,7 +4,12 @@ Builds a synthetic arrival trace (poisson / staggered / burst), replays it
 against the continuous-batching engine (or the static lockstep baseline for
 comparison), and reports throughput and latency percentiles.  A decision
 tree trained by the autotuner (``--dtree``) switches on counter-driven plan
-selection at serve time.
+selection at serve time; ``--online-retrain`` closes the loop — measured
+step counters and tok/s rewards feed a corpus (``--corpus-out``), the tree
+is retrained every ``--retrain-interval`` steps and hot-swapped
+(``--tree-out`` saves the final tree), and ``--explore-eps`` occasionally
+trials candidates the offline search never saw (``--no-explore`` pins pure
+exploitation, keeping greedy output bit-identical).
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-8b --reduced \
       --requests 8 --prompt-len 16 --gen-min 4 --gen-max 16 \
@@ -123,6 +128,34 @@ def main(argv=None):
     ap.add_argument("--eos-id", type=int, default=-1)
     ap.add_argument("--dtree", default="",
                     help="DecisionTree json from the autotuner corpus")
+    ap.add_argument("--online-retrain", action="store_true",
+                    help="close the paper loop online: tap measured step "
+                         "counters + tok/s rewards into a corpus, retrain "
+                         "the decision tree every --retrain-interval steps "
+                         "and hot-swap it (works from a cold start — no "
+                         "--dtree needed)")
+    ap.add_argument("--retrain-interval", type=int, default=32,
+                    help="decode steps between corpus flush / retrain "
+                         "attempts (with --online-retrain)")
+    ap.add_argument("--explore-eps", type=float, default=0.1,
+                    help="epsilon-greedy exploration rate over the "
+                         "serve-only candidate menu (with --online-retrain; "
+                         "0 keeps greedy output bit-identical)")
+    ap.add_argument("--explore-budget", type=int, default=64,
+                    help="hard cap on exploration decisions per engine")
+    ap.add_argument("--no-explore", action="store_true",
+                    help="disable exploration (equivalent to "
+                         "--explore-eps 0)")
+    ap.add_argument("--corpus-in", default="",
+                    help="corpus JSONL to merge before serving (e.g. the "
+                         "offline tuner's corpus; requires "
+                         "--online-retrain)")
+    ap.add_argument("--corpus-out", default="",
+                    help="write the accumulated observation corpus (JSONL) "
+                         "after serving (requires --online-retrain)")
+    ap.add_argument("--tree-out", default="",
+                    help="write the final (possibly online-retrained) "
+                         "decision tree JSON after serving")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -143,8 +176,18 @@ def main(argv=None):
         prefill_bucket=args.prefill_bucket, paged=args.paged,
         page_size=args.page_size, kv_pages=args.kv_pages,
         prefill_chunk=args.prefill_chunk,
-        spec_depth=-1 if args.spec_depth == "auto" else int(args.spec_depth)),
+        spec_depth=-1 if args.spec_depth == "auto" else int(args.spec_depth),
+        online_retrain=args.online_retrain,
+        retrain_interval=args.retrain_interval,
+        explore_eps=0.0 if args.no_explore else args.explore_eps,
+        explore_budget=args.explore_budget),
         dtree=dtree)
+    if (args.corpus_in or args.corpus_out) and engine.corpus is None:
+        print("[autotune] warning: --corpus-in/--corpus-out need "
+              "--online-retrain (no corpus exists without it) — ignoring")
+    if args.corpus_in and engine.corpus is not None:
+        from repro.autotune.corpus import Corpus
+        engine.corpus.merge(Corpus.load_jsonl(args.corpus_in))
 
     reqs = build_trace(args, cfg.vocab_size)
     if args.mode == "static":
@@ -176,6 +219,22 @@ def main(argv=None):
                   f"{sp['max_depth']}) committed {sp['committed_tokens']} "
                   f"tokens in {res['steps']} steps "
                   f"-> {sp['tokens_per_step']:.2f} tokens/step")
+    if args.mode == "continuous" and args.online_retrain:
+        at = res["autotune"]
+        print(f"[autotune] retrains={at['retrains']} swaps={at['swaps']} "
+              f"rejected={engine.trainer.reject_count} "
+              f"explored={at['explored']} "
+              f"explore_fraction={at['explore_fraction']:.2f} "
+              f"corpus_entries={at['corpus_entries']} "
+              f"pre_swap_tok_s={at['pre_swap_tok_s']:.1f} "
+              f"post_swap_tok_s={at['post_swap_tok_s']:.1f}")
+    if args.corpus_out and engine.corpus is not None:
+        n = engine.corpus.save_jsonl(args.corpus_out)
+        print(f"[autotune] corpus -> {args.corpus_out} ({n} entries)")
+    if args.tree_out and engine.dtree is not None:
+        with open(args.tree_out, "w") as f:
+            f.write(engine.dtree.to_json())
+        print(f"[autotune] dtree -> {args.tree_out}")
     return res
 
 

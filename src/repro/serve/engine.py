@@ -61,10 +61,22 @@ counters (:mod:`repro.core.counters`), scales them by pool occupancy, and
 predicts a per-region :class:`RegionConfig` — picking the ``RegionPlan``
 for the current load without re-running search (§4.2's "suggest ... without
 search" proposal, moved from offline tuning into the serving hot path).
+
+With ``online_retrain`` the loop also *learns* at serve time
+(:mod:`repro.autotune`): a measurement tap on both serving loops feeds
+per-bucket step counters and observed tok/s rewards into an append-only
+:class:`repro.autotune.corpus.Corpus`; every ``retrain_interval`` steps an
+:class:`repro.autotune.trainer.OnlineTrainer` refits the tree (holdout
+regret check: a worse tree is never swapped in) and hot-swaps it into the
+decider — the version bump invalidates the load-bucket latch, so the new
+tree takes effect on the next step.  An optional
+:class:`repro.autotune.explorer.EpsilonGreedyExplorer` (``explore_eps``)
+occasionally overrides the greedy choice so traffic populates candidate
+classes the offline search never tried (it skips ``serve_only`` knobs);
+with exploration off, greedy output stays bit-identical.
 """
 from __future__ import annotations
 
-import copy
 import dataclasses
 import time
 from typing import Any, Optional, Sequence
@@ -73,6 +85,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.autotune.candidates import canonical
+from repro.autotune.decider import PlanDecider  # noqa: F401  (re-export:
+                                                # moved to repro.autotune)
 from repro.core.policy import RegionConfig, RegionPlan, null_plan
 from repro.models.model import Model
 from repro.serve.scheduler import Request, Scheduler, summarize
@@ -91,6 +106,15 @@ class ServeConfig:
                                 # is sound
     autoplan: bool = True       # consult the dtree (when one is supplied)
     autoplan_top_n: int = 2     # hot regions consulted per (re)selection
+    # -- online autotuning (repro.autotune: measure->corpus->train->decide) --
+    online_retrain: bool = False   # tap step counters + tok/s rewards into a
+                                   # corpus, retrain the dtree, hot-swap it
+    retrain_interval: int = 32     # decode steps between corpus flush /
+                                   # retrain attempts
+    explore_eps: float = 0.0       # epsilon-greedy exploration over the
+                                   # serve-only candidate menu (0 = off:
+                                   # greedy output stays bit-identical)
+    explore_budget: int = 64       # hard cap on exploration decisions
     # -- paged KV pool -------------------------------------------------------
     paged: str = "auto"         # "auto": paged wherever the family supports
                                 # it; "on": require it; "off": slot pool
@@ -160,64 +184,6 @@ def draft_ngram(history: np.ndarray, depth: int, *, max_ngram: int = 3,
     return out
 
 
-def _overlay(base: RegionConfig, cand: RegionConfig) -> RegionConfig:
-    """Layer a candidate onto an existing region config: rules merge, and
-    only knobs the candidate explicitly sets (non-default) override — a
-    hand-tuned base plan keeps its block sizes when the tree votes a
-    rules-only candidate."""
-    defaults = RegionConfig()
-    out = dataclasses.replace(base, rules={**base.rules, **cand.rules})
-    for f in dataclasses.fields(RegionConfig):
-        if f.name == "rules":
-            continue
-        v = getattr(cand, f.name)
-        if v != getattr(defaults, f.name):
-            out = dataclasses.replace(out, **{f.name: v})
-    return out
-
-
-class PlanDecider:
-    """Counters -> DecisionTree -> RegionPlan, the paper loop at serve time.
-
-    The tree's classes are the tuner's candidate names (the corpus emitted
-    by ``autotune``); ``decide`` looks at the hottest regions of a measured
-    step, scales their counters by pool occupancy (``load_frac``) so the
-    prediction tracks load, and applies the predicted candidate's
-    RegionConfig wherever it is applicable.  No search is re-run.
-    """
-
-    def __init__(self, tree, kind: str = "decode", candidates=None):
-        from repro.core.tuner import default_candidates
-        self.tree = tree
-        self.by_name = {c.name: c for c in
-                        (candidates if candidates is not None
-                         else default_candidates(kind))}
-
-    def decide(self, rc, base_plan: RegionPlan, load_frac: float = 1.0,
-               top_n: int = 2):
-        """Returns (plan, decisions): decisions is [(region_prefix, class)]."""
-        from repro.core.dtree import features
-        from repro.core.tuner import canonical
-        plan = copy.deepcopy(base_plan)
-        decisions: list[tuple[str, str]] = []
-        seen: set[str] = set()
-        for region_name, _ in rc.top_regions("flops", 16):
-            prefix = canonical(region_name)
-            if prefix in seen:
-                continue
-            seen.add(prefix)
-            cls = self.tree.predict_one(
-                features(rc.regions[region_name].scaled(load_frac)))
-            cand = self.by_name.get(cls)
-            if cand is not None and cand.applies_to in prefix:
-                base = plan.region_configs.get(prefix, RegionConfig())
-                plan.region_configs[prefix] = _overlay(base, cand.config)
-            decisions.append((prefix, cls))
-            if len(seen) >= top_n:
-                break
-        return plan, decisions
-
-
 class Engine:
     def __init__(self, model: Model, params, plan: Optional[RegionPlan] = None,
                  serve_cfg: Optional[ServeConfig] = None, dtree=None):
@@ -227,7 +193,13 @@ class Engine:
         # a fresh ServeConfig per Engine (a dataclass default instance would
         # be shared by every Engine and mutate across instances)
         self.cfg = serve_cfg if serve_cfg is not None else ServeConfig()
-        self.dtree = dtree
+        # the decider is the swappable tree handle (repro.autotune.decider);
+        # with online_retrain it exists even before any tree does (cold
+        # start: the first retrain swaps one in)
+        self.decider: Optional[PlanDecider] = None
+        if dtree is not None or self.cfg.online_retrain:
+            self.decider = PlanDecider(dtree)
+        self._decider_version: Optional[int] = None   # version at last replan
 
         def prefill_fn(params, batch):
             return model.prefill(params, batch, self.plan,
@@ -251,6 +223,69 @@ class Engine:
         self._pool_rc = None                        # counters of base step
         self._load_bucket: Optional[int] = None
         self.decisions_log: list = []
+
+        # -- online autotuning state (measure->corpus->train->decide) --------
+        self.corpus = None
+        self.trainer = None
+        self.explorer = None
+        self._init_autotune_state()
+        self._tap_region: Optional[str] = None      # hottest attn-ish region
+        self._reset_tap_state()
+
+    def _init_autotune_state(self):
+        """Fresh corpus/trainer/explorer from the ServeConfig (shared by
+        __init__ and autotune_reset so the two can never drift apart)."""
+        if not self.cfg.online_retrain:
+            return
+        from repro.autotune.corpus import Corpus
+        from repro.autotune.explorer import EpsilonGreedyExplorer
+        from repro.autotune.trainer import OnlineTrainer
+        self.corpus = Corpus()
+        self.trainer = OnlineTrainer(interval=self.cfg.retrain_interval)
+        self.explorer = EpsilonGreedyExplorer(
+            eps=self.cfg.explore_eps, budget=self.cfg.explore_budget,
+            seed=self.cfg.seed)
+
+    def _reset_tap_state(self):
+        """Zero the per-trace measurement-tap accumulators and stats."""
+        self._tap_acc: dict = {}        # bucket -> [steps, tokens, secs]
+        self._tap_pending = 0           # taps since the last flush
+        self._bucket_class: dict = {}   # bucket -> class in effect (tap attn
+                                        # region), for reward attribution
+        self._exploring = False         # current plan carries an explored class
+        self._force_replan = False      # explorer wants a mid-bucket re-decide
+        self.autotune_stats = {
+            "retrains": 0, "swaps": 0, "explored": 0, "explore_steps": 0,
+            "steps": 0, "corpus_entries": 0,
+            # tok/s before the first tree swap vs after the last one — the
+            # post-swap delta the benchmark records
+            "pre_tokens": 0, "pre_secs": 0.0,
+            "post_tokens": 0, "post_secs": 0.0,
+        }
+
+    # -- the dtree is the decider's swappable handle -------------------------
+    @property
+    def dtree(self):
+        return self.decider.tree if self.decider is not None else None
+
+    @dtree.setter
+    def dtree(self, tree):
+        """Assigning a tree routes through PlanDecider.swap, so the version
+        bump invalidates the load-bucket replan latch — a tree installed
+        mid-bucket takes effect on the very next step."""
+        if self.decider is None:
+            self.decider = PlanDecider(tree)
+        else:
+            self.decider.swap(tree)
+
+    def autotune_reset(self, tree=None):
+        """Restart the online-autotune loop cold (fresh corpus / trainer /
+        explorer / stats, ``tree`` as the incumbent) while keeping compiled
+        pool steps warm — so a benchmark can measure repeated traces from
+        an identical learning state without paying recompiles."""
+        self._init_autotune_state()
+        self.dtree = tree               # swap: bumps version, busts the latch
+        self._reset_tap_state()
 
     def _sample(self, logits, key):
         return sample_rows(logits[:, -1, :].astype(jnp.float32), key,
@@ -377,9 +412,17 @@ class Engine:
         self._pool_step, self._spec_depth = self._build_step(self.plan)
         self._pool_steps[self._step_cache_key(self.plan)] = (
             self._pool_step, self._spec_depth)
-        if self.dtree is not None and self.cfg.autoplan:
+        if ((self.dtree is not None and self.cfg.autoplan)
+                or self.cfg.online_retrain):
             from repro.core import counters as counters_mod
             self._pool_rc = counters_mod.collect(self._pool_step)
+            # the measurement tap attributes rewards to the hottest
+            # attention-ish region (the decider's main lever); fall back to
+            # the hottest region of any kind
+            tops = self._pool_rc.top_regions("flops", 16)
+            attn = [r for r, _ in tops if "attn" in r]
+            self._tap_region = (attn[0] if attn
+                                else (tops[0][0] if tops else None))
 
     def _sample_pool(self, logits, active, key, temp):
         """Pool-step sampling via the shared :func:`sample_rows`, with the
@@ -487,22 +530,136 @@ class Engine:
         return cache, int(prompt[-1])
 
     def _maybe_replan(self, n_active: int):
-        """On load-bucket changes, re-pick the decode plan via the dtree."""
-        if self._pool_rc is None:
+        """On load-bucket changes — or when the decider's tree was hot-
+        swapped (version bump) or the explorer forced a re-decide — re-pick
+        the decode plan via the dtree.  Without the version check a freshly
+        retrained tree would silently never take effect until the next
+        occupancy-bucket change (regression-tested)."""
+        if self._pool_rc is None or self.decider is None:
             return
         bucket = load_bucket(n_active)
-        if bucket == self._load_bucket:
+        if (bucket == self._load_bucket
+                and self.decider.version == self._decider_version
+                and not self._force_replan):
             return
         self._load_bucket = bucket
+        self._decider_version = self.decider.version
+        self._force_replan = False
         load_frac = min(bucket, self._pool.n_slots) / self._pool.n_slots
-        plan, decisions = PlanDecider(self.dtree).decide(
+        plan, decisions = self.decider.decide(
             self._pool_rc, self.plan, load_frac=load_frac,
             top_n=self.cfg.autoplan_top_n)
+        # reward attribution: the class actually in effect for the tap region
+        tap_prefix = (canonical(self._tap_region) if self._tap_region
+                      else None)
+        cls_in_effect = "keep_default"
+        for prefix, cls in decisions:
+            if prefix == tap_prefix:
+                cls_in_effect = self.decider.applied_class(prefix, cls)
+        # epsilon-greedy exploration: override the greedy choice so serve
+        # traffic populates classes the offline search never tried
+        self._exploring = False
+        if self.explorer is not None and tap_prefix is not None:
+            explored = self.explorer.maybe_explore(plan, region=tap_prefix)
+            if explored is not None:
+                cls_in_effect, plan = explored
+                decisions = decisions + [(f"explore:{tap_prefix}",
+                                          cls_in_effect)]
+                self.autotune_stats["explored"] = self.explorer.explored
+                self._exploring = True
+        # the class for this bucket is changing mid-window: flush the steps
+        # accumulated under the OLD class first, or their reward would be
+        # credited to the new class at the next _tap_flush (teaching the
+        # tree the old class's throughput as the new class's)
+        old_cls = self._bucket_class.get(bucket)
+        if (old_cls is not None and old_cls != cls_in_effect
+                and bucket in self._tap_acc):
+            self._append_bucket_obs(bucket, self._tap_acc.pop(bucket),
+                                    old_cls)
+        self._bucket_class[bucket] = cls_in_effect
         key = self._step_cache_key(plan)
         if key not in self._pool_steps:
             self._pool_steps[key] = self._build_step(plan)
         self._pool_step, self._spec_depth = self._pool_steps[key]
         self.decisions_log.append((n_active, decisions))
+
+    # ------------------------------------------------------------------
+    # Online autotuning: the measurement tap (measure -> corpus -> train
+    # -> decide, closed inside the serving loop)
+    # ------------------------------------------------------------------
+    def _tap_step(self, n_active: int, tokens: int, dt_s: float):
+        """Record one decode step's work into the per-bucket accumulators;
+        every ``retrain_interval`` steps, flush to the corpus and retrain."""
+        if self.corpus is None or self._pool_rc is None:
+            return
+        st = self.autotune_stats
+        st["steps"] += 1
+        if self._exploring:
+            st["explore_steps"] += 1
+        seg = "post" if st["swaps"] else "pre"
+        st[seg + "_tokens"] += tokens
+        st[seg + "_secs"] += dt_s
+        acc = self._tap_acc.setdefault(load_bucket(n_active), [0, 0, 0.0])
+        acc[0] += 1
+        acc[1] += tokens
+        acc[2] += dt_s
+        self._tap_pending += 1
+        if self._tap_pending >= max(self.cfg.retrain_interval, 1):
+            self._tap_flush()
+
+    def _append_bucket_obs(self, bucket: int, acc, cls: str):
+        """Append one bucket's accumulated window (``[steps, toks, secs]``)
+        to the corpus as a rewarded observation attributed to ``cls``."""
+        from repro.core.dtree import features
+        steps, toks, secs = acc
+        if self.corpus is None or steps == 0 or secs <= 0 or toks == 0:
+            return
+        region = self._tap_region
+        counters = (self._pool_rc.regions.get(region) if region else None)
+        if counters is None:
+            return
+        load_frac = min(bucket, self._pool.n_slots) / self._pool.n_slots
+        self.corpus.append(canonical(region),
+                           features(counters.scaled(load_frac)),
+                           cls, reward=toks / secs)
+
+    def _tap_flush(self):
+        """Corpus append (per-bucket features + class + tok/s reward) ->
+        retrain -> hot-swap.  A swap bumps the decider version, which
+        forces a replan on the very next step (the load-bucket latch is no
+        longer trusted)."""
+        self._tap_pending = 0
+        for bucket, acc in self._tap_acc.items():
+            self._append_bucket_obs(
+                bucket, acc, self._bucket_class.get(bucket, "keep_default"))
+        self._tap_acc.clear()
+        self.autotune_stats["corpus_entries"] = len(self.corpus)
+        new_tree = self.trainer.maybe_retrain(self.corpus, self.decider.tree)
+        self.autotune_stats["retrains"] = self.trainer.retrain_count
+        if new_tree is not None:
+            self.decider.swap(new_tree)     # version bump busts the latch
+            self.autotune_stats["swaps"] += 1
+        elif self.explorer is not None and self.explorer.active:
+            # no swap this round: give the explorer a mid-bucket chance at
+            # the retrain cadence (bounded by its eps and budget) so new
+            # classes keep entering the corpus even under steady load
+            self._force_replan = True
+
+    def autotune_summary(self) -> dict:
+        """Machine-readable record of the online loop (serve() returns it)."""
+        st = dict(self.autotune_stats)
+        pre = st.pop("pre_tokens"), st.pop("pre_secs")
+        post = st.pop("post_tokens"), st.pop("post_secs")
+        st["pre_swap_tok_s"] = pre[0] / pre[1] if pre[1] > 0 else 0.0
+        st["post_swap_tok_s"] = post[0] / post[1] if post[1] > 0 else 0.0
+        st["post_swap_tok_s_delta"] = (
+            st["post_swap_tok_s"] - st["pre_swap_tok_s"]
+            if pre[1] > 0 and post[1] > 0 else 0.0)
+        st["explore_fraction"] = (st["explore_steps"] / st["steps"]
+                                  if st["steps"] else 0.0)
+        if self.explorer is not None:
+            st["explored"] = self.explorer.explored
+        return st
 
     def _step_cache_key(self, plan: RegionPlan) -> str:
         """Compiled pool steps are cached by the plan's *step-affecting*
@@ -570,6 +727,7 @@ class Engine:
             "requests": list(requests),
             "stats": summarize(requests),
             "decisions": list(self.decisions_log[log_start:]),
+            "autotune": self.autotune_summary(),
         }
         out.update(res)
         return out
@@ -635,15 +793,19 @@ class Engine:
                     time.sleep(min(dt, 0.05))
                 continue
 
-            self._maybe_replan(len(sched.active))
+            n_act = len(sched.active)
+            self._maybe_replan(n_act)
+            t_step0 = time.perf_counter()
             key, sub = jax.random.split(key)
             toks, pool.pool = self._pool_step(
                 self.params, pool.pool, jnp.asarray(pending),
                 jnp.asarray(active), sub)
             steps += 1
-            self._commit_tokens(sched, np.asarray(toks),
-                                np.ones((pool.n_slots,), np.int32),
-                                pending, active, now(), pool.free)
+            consumed = self._commit_tokens(sched, np.asarray(toks),
+                                           np.ones((pool.n_slots,), np.int32),
+                                           pending, active, now(), pool.free)
+            self._tap_step(n_act, sum(consumed.values()),
+                           time.perf_counter() - t_step0)
         return {"steps": steps}
 
     def _serve_paged(self, sched: Scheduler) -> dict:
@@ -755,7 +917,9 @@ class Engine:
                     time.sleep(min(dt, 0.05))
                 continue
 
-            self._maybe_replan(len(sched.active))
+            n_act = len(sched.active)
+            self._maybe_replan(n_act)
+            t_step0 = time.perf_counter()
             D = self._spec_depth
             S = D + 1
             max_depth = max(max_depth, D)
@@ -802,6 +966,8 @@ class Engine:
             for slot, c in consumed.items():
                 if slot in sched.active:    # finished slots already released
                     pool.rollback(slot, written[slot] - c)
+            self._tap_step(n_act, sum(consumed.values()),
+                           time.perf_counter() - t_step0)
         return {"steps": steps,
                 "spec": {"committed_tokens": committed_total,
                          "slot_steps": slot_steps,

@@ -160,3 +160,25 @@ def test_dtree_single_class():
     X = np.zeros((3, 7))
     tree = DecisionTree().fit(X, ["a", "a", "a"])
     assert tree.predict(X) == ["a", "a", "a"]
+
+
+def test_core_tuner_shim_reexports_the_autotune_package():
+    """The tuner moved to repro.autotune; core.tuner must keep every public
+    name importable, and the Tuner class must behave like autotune()."""
+    from repro.core.tuner import (Candidate, Iteration,  # noqa: F401
+                                  TuneResult, Tuner, autotune, canonical,
+                                  compile_evaluator, default_candidates)
+    import repro.autotune as at
+    assert Tuner is at.Tuner and autotune is at.autotune
+    assert default_candidates is at.default_candidates
+    res = Tuner(kind="train", candidates=[
+        Candidate("attn_blockq_1k", RegionConfig(block_q=1024), "attn"),
+        Candidate("attn_blockq_4k", RegionConfig(block_q=4096), "attn"),
+    ], max_iters=4, verbose=False).autotune(None, None,
+                                            evaluate=fake_evaluator())
+    assert res.best_bound_s < res.baseline_bound_s * 0.5
+    assert res.plan.config_for("layer0/attn").block_q == 1024
+    # the search corpus exports as a mergeable online Corpus
+    corpus = res.to_corpus()
+    assert len(corpus) == len(res.corpus)
+    assert all(not e.rewarded for e in corpus.entries())
