@@ -36,6 +36,15 @@ hot-swaps the tree mid-trace — ``BENCH_serve.json`` records the retrain
 count, explore fraction, post-swap tok/s delta and the online-vs-offline
 ratio CI gates on.
 
+The **overcommit rows** compare lazy vs full reservation
+(:mod:`repro.serve.memory`) on a burst trace at a deliberately tight
+``kv_pages`` budget: lazy admission must sustain >= 1.5x the in-flight
+requests, complete every submitted request through preemption +
+recompute-prefill, and keep greedy tokens bit-identical to an
+unconstrained pool (asserted here, gated by CI's ``overcommit-smoke``
+job via ``ratios.lazy_vs_full_inflight``).  ``--overcommit-only`` runs
+just this section.
+
 Row format: ``name,us_per_token,tok_per_s`` (plus derived ratio rows).
 After a run, :data:`json_summary` holds the machine-readable record
 (tok/s, latency percentiles, TTFT for every path, HBM high-water,
@@ -73,6 +82,17 @@ GENS = [96, 8, 12, 8, 48, 12, 8, 8]    # mixed lengths: padding hurts static,
                                        # so tok/s ratios measure the steps
 GAP_S = 0.005
 PARAM_SCALE = 0.3                      # echo-regime init (see module doc)
+
+# -- overcommit section (lazy vs full reservation at tight --kv-pages) -------
+PROMPT_OC = 8
+GENS_OC = [24, 24, 32, 24, 24, 32, 24, 24]   # every request decode-heavy, so
+                                             # worst-case reservations crowd
+                                             # the tight pool immediately
+PAGE_OC = 8
+SLOTS_OC = 6
+KV_PAGES_OC = 13                       # 12 allocatable pages: room for just
+                                       # TWO worst-case (4-5 page) requests
+                                       # under full reservation
 
 json_summary: dict = {}
 
@@ -178,6 +198,84 @@ def _spec_dtree(engine: Engine):
     return DecisionTree(max_depth=3).fit(np.stack(X), y), rc
 
 
+def _overcommit_section(model, params, vocab: int) -> tuple[list, dict]:
+    """Lazy vs full reservation on a deliberately overcommitted burst trace
+    at the same tight ``kv_pages`` budget (the elastic-memory headline):
+    lazy admission must sustain >= 1.5x the in-flight requests, complete
+    every submitted request through preemption + recompute-prefill, and
+    keep each request's greedy token stream bit-identical to a run on an
+    unconstrained pool.  Counters (peak in-flight, preemptions, stalls)
+    are step-count-deterministic — arrivals are a burst at t=0 — so the
+    gate is immune to wall-clock jitter."""
+    rng = np.random.default_rng(3)
+    prompts = rng.integers(0, vocab, (len(GENS_OC), PROMPT_OC)).astype(
+        np.int32)
+
+    def mk():
+        return [Request(rid=i, prompt=prompts[i].copy(), max_new_tokens=g)
+                for i, g in enumerate(GENS_OC)]
+
+    max_len = PROMPT_OC + max(GENS_OC) + 1
+    common = dict(max_len=max_len, max_slots=SLOTS_OC, page_size=PAGE_OC,
+                  prefill_chunk=PAGE_OC, spec_depth=0)
+    # reference: unconstrained pool (per-slot worst case), never preempts
+    ref_eng = Engine(model, params, serve_cfg=ServeConfig(**common))
+    ref_reqs = mk()
+    ref_eng.serve(ref_reqs)
+    full_eng = Engine(model, params, serve_cfg=ServeConfig(
+        **common, kv_pages=KV_PAGES_OC, reservation="full"))
+    full_reqs = mk()
+    res_f = full_eng.serve(full_reqs)
+    lazy_eng = Engine(model, params, serve_cfg=ServeConfig(
+        **common, kv_pages=KV_PAGES_OC, reservation="lazy",
+        mem_watermark=0.0))
+    lazy_reqs = mk()
+    res_l = lazy_eng.serve(lazy_reqs)
+
+    for reqs, tag in ((lazy_reqs, "lazy"), (full_reqs, "full")):
+        for r, b in zip(reqs, ref_reqs):
+            assert r.out_tokens == b.out_tokens, (
+                f"{tag} overcommit changed request {r.rid}'s tokens")
+    mf, ml = res_f["memory"], res_l["memory"]
+    sf, sl = res_f["stats"], res_l["stats"]
+    ratio = ml["peak_resident"] / max(mf["peak_resident"], 1)
+    rows = [
+        (f"serve_oc_full_inflight,{mf['peak_resident']},"
+         f"completed={sf['n_done']}_of_{len(GENS_OC)}"),
+        (f"serve_oc_lazy_inflight,{ml['peak_resident']},"
+         f"completed={sl['n_done']}_preempts={ml['preemptions']}"
+         f"_stalls={ml['stall_steps']}"),
+        f"serve_oc_lazy_vs_full_inflight,{ratio:.2f},gate>=1.5",
+    ]
+    oc = {
+        "kv_pages": KV_PAGES_OC, "page_size": PAGE_OC, "slots": SLOTS_OC,
+        "submitted": len(GENS_OC),
+        "bit_identical": True,             # asserted above
+        "full": {
+            "completed": sf["n_done"],
+            "tok_per_s": sf["tok_per_s"],
+            "peak_inflight": mf["peak_resident"],
+            "preemptions": mf["preemptions"],
+            "stall_steps": mf["stall_steps"],
+            "free_pages_min": mf["free_pages_min"],
+        },
+        "lazy": {
+            "completed": sl["n_done"],
+            "tok_per_s": sl["tok_per_s"],
+            "peak_inflight": ml["peak_resident"],
+            "preemptions": ml["preemptions"],
+            "stall_steps": ml["stall_steps"],
+            "grown_pages": ml["grown_pages"],
+            "admit_blocked": ml["admit_blocked"],
+            "free_pages_min": ml["free_pages_min"],
+            "fragmentation": ml["fragmentation"],
+            "preempted_requests": sl["preempted_requests"],
+            "requeue_wait_p50_s": sl["requeue_wait_p50_s"],
+        },
+    }
+    return rows, oc
+
+
 def _best_of(engine: Engine, base: list[Request], n: int = 2):
     """Serve the identical trace ``n`` times and keep the fastest run —
     wall-clock serving of sub-30ms steps is noisy on shared CPU, and the
@@ -191,7 +289,7 @@ def _best_of(engine: Engine, base: list[Request], n: int = 2):
     return best
 
 
-def run(smoke: bool = False):
+def run(smoke: bool = False, overcommit_only: bool = False):
     global json_summary
     # smoke keeps the same 8-request trace (the CI guard gates on ratios
     # that need the full concurrency of the mixed-length trace) but takes
@@ -202,6 +300,19 @@ def run(smoke: bool = False):
     model = build(cfg)
     params = jax.tree.map(lambda a: a * PARAM_SCALE,
                           model.init(jax.random.PRNGKey(0)))
+    if overcommit_only:
+        # the focused elastic-memory gate (CI's overcommit-smoke job):
+        # just the lazy-vs-full comparison, skipping every other path
+        oc_rows, oc = _overcommit_section(model, params, cfg.vocab_size)
+        yield from oc_rows
+        json_summary = {
+            "arch": ARCH, "smoke": smoke, "overcommit_only": True,
+            "overcommit": oc,
+            "ratios": {"lazy_vs_full_inflight":
+                       oc["lazy"]["peak_inflight"]
+                       / max(oc["full"]["peak_inflight"], 1)},
+        }
+        return
     max_len = PROMPT + max(GENS) + 1
     paged_eng = Engine(model, params, serve_cfg=ServeConfig(
         max_len=max_len, max_slots=SLOTS, page_size=PAGE,
@@ -344,6 +455,11 @@ def run(smoke: bool = False):
            f"{at['post_swap_tok_s_delta']:.1f},"
            f"pre={at['pre_swap_tok_s']:.1f}_post={at['post_swap_tok_s']:.1f}")
 
+    # -- elastic KV memory: lazy vs full reservation under overcommit
+    oc_rows, oc = _overcommit_section(model, params, cfg.vocab_size)
+    yield from oc_rows
+
+    mem_p = res_p.get("memory", {})
     json_summary = {
         "arch": ARCH, "slots": SLOTS, "page_size": PAGE,
         "prefill_chunk": CHUNK, "n_requests": n_req, "smoke": smoke,
@@ -356,6 +472,12 @@ def run(smoke: bool = False):
             "hbm_bytes": pool.hbm_bytes(),
             "hbm_high_water_bytes": pool.high_water_bytes(),
             "pool_steps": res_p["steps"],
+            # governor taps alongside the high-water (all zero/empty on an
+            # uncontended pool — the overcommit section exercises them)
+            "preemptions": mem_p.get("preemptions", 0),
+            "stall_steps": mem_p.get("stall_steps", 0),
+            "fragmentation": mem_p.get("fragmentation", {}),
+            "free_pages_min": mem_p.get("free_pages_min", 0),
         },
         "spec": {
             "tok_per_s": spec_tok_s,
@@ -414,8 +536,12 @@ def run(smoke: bool = False):
                 max(paged_tok_s, spec_tok_s) / max(static_tok_s, 1e-9),
             "online_vs_offline_tok_s":
                 online_tok_s / max(offline_tok_s, 1e-9),
+            "lazy_vs_full_inflight":
+                oc["lazy"]["peak_inflight"]
+                / max(oc["full"]["peak_inflight"], 1),
         },
         "inflight_at_fixed_hbm": {"paged": paged_cap, "slot": slot_cap},
+        "overcommit": oc,
     }
 
 
@@ -427,9 +553,11 @@ def write_json(path: str = "BENCH_serve.json") -> None:
 
 if __name__ == "__main__":
     smoke = "--smoke" in sys.argv
-    for row in run(smoke=smoke):
+    oc_only = "--overcommit-only" in sys.argv
+    for row in run(smoke=smoke, overcommit_only=oc_only):
         print(row)
     write_json()
-    print(f"# wrote BENCH_serve.json (smoke={smoke})")
-    if smoke:
+    print(f"# wrote BENCH_serve.json (smoke={smoke} "
+          f"overcommit_only={oc_only})")
+    if smoke and not oc_only:
         assert json_summary["paged"]["tok_per_s"] > 0, "smoke run produced 0 tok/s"

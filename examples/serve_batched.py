@@ -63,3 +63,29 @@ for r in reqs:
           f"done {r.t_done*1e3:7.1f} ms")
 print(f"  {s['tokens']} tokens -> {s['tok_per_s']:.0f} tok/s, "
       f"p50 latency {s['latency_p50_s']*1e3:.0f} ms")
+
+# -- overcommit: lazy admission + preemption on a deliberately tight pool ----
+# Full reservation would fit only 2 of these decode-heavy requests into 14
+# allocatable pages; lazy admission starts each with its prompt pages + one
+# decode page, grows at page boundaries, and when the free list runs dry the
+# governor preempts the youngest decode — it re-enters as recompute-prefill
+# over prompt + generated-so-far, so every token stream is exactly what an
+# uncontended pool would have produced.
+engine_oc = Engine(model, params, serve_cfg=ServeConfig(
+    max_len=32, max_slots=4, page_size=4, kv_pages=15,
+    reservation="lazy", mem_watermark=0.0))
+reqs_oc = [Request(rid=i,
+                   prompt=rng.integers(0, cfg.vocab_size, 6).astype(np.int32),
+                   max_new_tokens=int(rng.integers(14, 19)))
+           for i in range(6)]
+res_oc = engine_oc.serve(reqs_oc)
+mem = res_oc["memory"]
+s = res_oc["stats"]
+print(f"\novercommit (14 allocatable pages, lazy reservation): "
+      f"{s['n_done']}/6 requests completed")
+print(f"  peak in-flight {mem['peak_resident']} (full reservation fits 2), "
+      f"{mem['preemptions']} preemptions, "
+      f"{mem['grown_pages']} pages lazily grown, "
+      f"{s['preempts']} evictions over "
+      f"{s['preempted_requests']} requests "
+      f"(requeue wait p50 {s['requeue_wait_p50_s']*1e3:.1f} ms)")

@@ -89,6 +89,26 @@ def default_candidates(kind: str = "train") -> list[Candidate]:
                       serve_only=True),
             Candidate("spec4", RegionConfig(spec_depth=4), "attn",
                       serve_only=True),
+            # KV-memory governor policy (repro.serve.memory): full
+            # reservation is preemption-free but runs the pool half-empty
+            # on short-generation traffic; lazy admission overcommits —
+            # more in-flight requests at the same HBM — at the price of
+            # preemption/recompute churn when decodes outgrow the free
+            # list.  Which side wins depends on the measured load (long
+            # decode tails vs short bursts), so it's the decider's call;
+            # the watermark variants trade admission depth against growth
+            # headroom.  Purely an allocator-policy knob: never reshapes
+            # the compiled step (the step cache strips it).
+            Candidate("mem_full", RegionConfig(reservation="full"), "attn",
+                      serve_only=True),
+            Candidate("mem_lazy", RegionConfig(reservation="lazy"), "attn",
+                      serve_only=True),
+            Candidate("mem_lazy_wm10", RegionConfig(
+                reservation="lazy", mem_watermark=0.10), "attn",
+                serve_only=True),
+            Candidate("mem_lazy_wm30", RegionConfig(
+                reservation="lazy", mem_watermark=0.30), "attn",
+                serve_only=True),
         ]
     return cands
 

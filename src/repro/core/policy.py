@@ -115,6 +115,12 @@ class RegionConfig:
     spec_depth: int = -1    # speculative decode draft depth per pool step
                             # (-1 = knob unset; 0 = no speculation; N>0 =
                             # draft N tokens, verify with q_len N+1)
+    reservation: str = ""   # paged-KV admission policy ('' = unset;
+                            # 'full' = reserve worst case up front;
+                            # 'lazy' = prompt pages + 1, grow + preempt)
+    mem_watermark: float = -1.0  # lazy-admission free-page high watermark
+                                 # as a fraction of allocatable pages
+                                 # (-1 = unset; engine default 0.1)
 
     def to_json(self):
         return dataclasses.asdict(self)

@@ -112,6 +112,28 @@ def main(argv=None):
                          "case; lower trades HBM for queueing)")
     ap.add_argument("--prefill-chunk", type=int, default=0,
                     help="chunked prefill piece size (0 = whole prompt)")
+    ap.add_argument("--reservation", choices=("full", "lazy", "auto"),
+                    default="auto",
+                    help="paged KV admission policy: 'full' reserves each "
+                         "request's worst case up front (preemption-free); "
+                         "'lazy' admits with prompt pages + one decode page "
+                         "and grows at page boundaries, preempting the "
+                         "youngest decode when pages run dry (more "
+                         "in-flight requests at the same --kv-pages, "
+                         "greedy output bit-identical); 'auto' lets the "
+                         "serve-time PlanDecider pick the mem_full/"
+                         "mem_lazy candidates per load bucket (unset = "
+                         "full)")
+    ap.add_argument("--mem-watermark", type=float, default=-1.0,
+                    help="lazy-admission free-page high watermark as a "
+                         "fraction of allocatable pages: new requests are "
+                         "admitted only while the free list stays above "
+                         "it, protecting decode growth headroom (-1 = "
+                         "auto: plan knob, else 0.1)")
+    ap.add_argument("--max-preempts", type=int, default=4,
+                    help="per-request eviction cap for the memory "
+                         "governor's victim selection (the oldest "
+                         "resident's progress guarantee may override it)")
     ap.add_argument("--spec-depth", default="auto",
                     choices=("auto", "0", "1", "2", "3", "4"),
                     help="speculative decode draft depth per pool step "
@@ -176,6 +198,8 @@ def main(argv=None):
         prefill_bucket=args.prefill_bucket, paged=args.paged,
         page_size=args.page_size, kv_pages=args.kv_pages,
         prefill_chunk=args.prefill_chunk,
+        reservation=args.reservation, mem_watermark=args.mem_watermark,
+        max_preempts=args.max_preempts,
         spec_depth=-1 if args.spec_depth == "auto" else int(args.spec_depth),
         online_retrain=args.online_retrain,
         retrain_interval=args.retrain_interval,
@@ -213,6 +237,23 @@ def main(argv=None):
               f"pool={pool.hbm_bytes()/2**20:.1f} MiB "
               f"high-water={pool.high_water_bytes()/2**20:.1f} MiB "
               f"({pool.allocator.high_water} pages)")
+        mem = res.get("memory", {})
+        if mem:
+            frag = "+".join(f"{n}x{c}" for n, c in
+                            sorted(mem["fragmentation"].items()))
+            print(f"[pool] reservation={mem['reservation']} "
+                  f"watermark={mem['watermark']:.2f} "
+                  f"peak_inflight={mem['peak_resident']} "
+                  f"preemptions={mem['preemptions']} "
+                  f"stall_steps={mem['stall_steps']} "
+                  f"grown_pages={mem['grown_pages']} "
+                  f"free_pages_min={mem['free_pages_min']} "
+                  f"frag_runs={frag or 'none'}")
+        if s.get("preempts"):
+            print(f"[pool] preempted {s['preempted_requests']} requests "
+                  f"{s['preempts']} times, requeue wait "
+                  f"p50 {s['requeue_wait_p50_s']*1e3:.1f} ms "
+                  f"max {s['requeue_wait_max_s']*1e3:.1f} ms")
         sp = res.get("spec", {})
         if sp.get("max_depth", 0) > 0:      # speculation actually ran
             print(f"[spec] depth={args.spec_depth} (max used "

@@ -11,13 +11,19 @@ Two pool layouts back :meth:`repro.serve.engine.Engine.serve`:
   Page 0 is a reserved *null sink*: the allocator never hands it out, freed
   slots have all-zero block tables, so fixed-shape decode writes for
   inactive slots land harmlessly in page 0 instead of corrupting a live
-  page.  Admission is reservation-based and preemption-free: a request is
-  admitted only when ``ceil(tokens_needed / page_size)`` pages are free, so
-  decode never hits an out-of-pages fault mid-flight.  Because a short
-  request reserves only its own worst case — not the pool-wide ``max_len``
-  — mixed-length traffic fits far more in-flight requests into the same
-  HBM than whole-cache slots (no internal fragmentation beyond the final
-  partial page).  ``page_size`` is a tunable knob (``RegionConfig
+  page.  Admission has two modes, chosen by the
+  :class:`repro.serve.memory.MemoryGovernor`: **full** reservation admits a
+  request only when its whole worst case ``ceil(tokens_needed /
+  page_size)`` is free (preemption-free — decode never hits an
+  out-of-pages fault mid-flight), while **lazy** admission
+  (:meth:`PagedKVPool.admit_pages`) grants only the prompt's pages plus
+  one decode page and grows one page at a time (:meth:`PagedKVPool.grow`)
+  as generation crosses page boundaries — overcommitting the pool and
+  falling back to victim preemption (:meth:`PagedKVPool.preempt`) when the
+  free list runs dry.  Because a request holds only what its sequence
+  actually occupies, mixed-length traffic fits far more in-flight requests
+  into the same HBM than whole-cache slots (no internal fragmentation
+  beyond the final partial page).  ``page_size`` is a tunable knob (``RegionConfig
   .page_size``): small pages waste less tail memory, large pages gather
   with fewer, bigger DMA blocks in the paged-attention kernel.
 
@@ -55,8 +61,7 @@ class PageAllocator:
     page has exactly one owner; :meth:`free` releases all of an owner's
     pages at once.  ``alloc`` is all-or-nothing so admission control can
     reserve a request's worst case atomically; :meth:`append` grows an
-    existing owner one page at a time (used by tests and future lazy
-    allocation).
+    existing owner one page at a time (the lazy-allocation growth path).
     """
 
     def __init__(self, n_pages: int):
@@ -117,6 +122,28 @@ class PageAllocator:
         self._free.extend(reversed(pages))
         return pages
 
+    def free_run_histogram(self) -> dict[int, int]:
+        """Histogram of contiguous free-page-id runs: ``{run_len: count}``.
+
+        The paged layout never *needs* contiguity (the block table is a full
+        indirection), so this is purely an observability metric: a free list
+        shredded into short runs means admissions and releases have
+        interleaved heavily — the governor reports it next to the HBM
+        high-water so memory-pressure incidents can be read off one line."""
+        hist: dict[int, int] = {}
+        run, prev = 0, None
+        for p in sorted(self._free):
+            if prev is not None and p == prev + 1:
+                run += 1
+            else:
+                if run:
+                    hist[run] = hist.get(run, 0) + 1
+                run = 1
+            prev = p
+        if run:
+            hist[run] = hist.get(run, 0) + 1
+        return hist
+
     def check_invariants(self) -> None:
         """Free + live partition pages 1..n-1; ownership maps agree."""
         free = set(self._free)
@@ -163,6 +190,7 @@ class PagedKVPool:
         self.lengths = np.zeros((n_slots,), np.int32)
         self._free_slots = list(range(n_slots - 1, -1, -1))
         self._active: set[int] = set()
+        self.n_preempts = 0                 # victims evicted mid-flight
 
     # -- slot accounting -----------------------------------------------------
     @property
@@ -180,15 +208,39 @@ class PagedKVPool:
 
     def admit(self, n_tokens: int) -> Optional[int]:
         """Reserve a slot plus the request's worst-case pages (atomic)."""
-        if not self.can_admit(n_tokens):
+        return self.admit_pages(pages_for(n_tokens, self.page_size))
+
+    def admit_pages(self, n_pages: int) -> Optional[int]:
+        """Admit a request holding exactly ``n_pages`` pages — the lazy
+        entry point (:class:`repro.serve.memory.MemoryGovernor`): a request
+        starts with only its prompt's pages plus one decode page and later
+        grows one page at a time via :meth:`grow`.  Atomic like
+        :meth:`admit`; None when no slot or not enough free pages."""
+        if (not self._free_slots or n_pages > self.max_pages_per_slot
+                or n_pages > self.allocator.n_free):
             return None
         slot = self._free_slots.pop()
-        pages = self.allocator.alloc(slot, pages_for(n_tokens, self.page_size))
+        pages = self.allocator.alloc(slot, n_pages)
         self._active.add(slot)
         self.block_tables[slot] = 0
         self.block_tables[slot, :len(pages)] = pages
         self.lengths[slot] = 0
         return slot
+
+    def grow(self, slot: int) -> bool:
+        """Extend ``slot`` by one page (lazy growth at a page boundary).
+        False when the allocator is dry or the block table is full — the
+        governor then reclaims a victim or stalls the slot."""
+        if slot not in self._active:
+            raise ValueError(f"slot {slot} is not active")
+        held = len(self.allocator.pages_of(slot))
+        if held >= self.max_pages_per_slot:
+            return False
+        p = self.allocator.append(slot)
+        if p is None:
+            return False
+        self.block_tables[slot, held] = p
+        return True
 
     def release(self, slot: int) -> None:
         """Free a slot's pages; its block-table row reverts to the null page."""
@@ -199,6 +251,17 @@ class PagedKVPool:
         self._free_slots.append(slot)
         self.block_tables[slot] = 0
         self.lengths[slot] = 0
+
+    def preempt(self, slot: int) -> int:
+        """Evict a victim mid-flight: identical page bookkeeping to
+        :meth:`release` (the request's K/V is *discarded*, not swapped —
+        it re-enters as recompute-prefill over prompt + generated-so-far),
+        but counted separately so the governor's report distinguishes
+        completions from evictions.  Returns the number of pages freed."""
+        n = len(self.allocator.pages_of(slot))
+        self.release(slot)
+        self.n_preempts += 1
+        return n
 
     def advance(self, slot: int, n_tokens: int) -> None:
         """Record ``n_tokens`` newly written tokens for ``slot`` (multi-token

@@ -46,6 +46,20 @@ Two paths share one Engine:
   speculation on memory-bound low-occupancy pools, shallow under
   compute-bound high occupancy.
 
+  **Elastic KV memory** (:mod:`repro.serve.memory`): admission and
+  reclamation route through a :class:`MemoryGovernor`.  ``reservation=
+  'full'`` (default) reserves each request's worst case up front —
+  preemption-free; ``'lazy'`` admits with only the prompt's pages plus
+  one decode page (watermark-gated so growth headroom survives), grows
+  one page at a time at page boundaries, and when the allocator runs dry
+  preempts the youngest resident decode — the victim re-queues through
+  the scheduler's PREEMPTED state and re-enters as recompute-prefill
+  over prompt + generated-so-far, so greedy output stays bit-identical.
+  ``reservation``/``mem_watermark`` are ``RegionConfig`` knobs with
+  serve-only candidates (``mem_full``/``mem_lazy``/``mem_lazy_wm*``), so
+  with ``--reservation auto`` the PlanDecider picks memory policy per
+  load bucket like any other knob — without ever recompiling the step.
+
   Families whose per-request state does not grow with the sequence
   (ssm/hybrid recurrent state, sliding-window rings) keep the **slot
   pool**: whole caches stacked on a slot axis, the single-request
@@ -123,6 +137,18 @@ class ServeConfig:
     kv_pages: int = 0           # total pages incl. the null page (0 = the
                                 # per-slot worst case — same HBM as the slot
                                 # pool; set lower to trade HBM for queueing)
+    # -- elastic KV memory (repro.serve.memory.MemoryGovernor) ---------------
+    reservation: str = "auto"   # paged admission policy: "full" = worst
+                                # case up front (preemption-free), "lazy" =
+                                # prompt pages + 1 then grow/preempt,
+                                # "auto" = the plan's attn-region
+                                # reservation knob (the PlanDecider's
+                                # mem_full/mem_lazy channel; unset = full)
+    mem_watermark: float = -1.0  # lazy-admission free-page high watermark
+                                 # fraction (-1 = auto: plan knob, else 0.1)
+    max_preempts: int = 4       # per-request eviction cap; the oldest
+                                # resident's mandatory headroom may still
+                                # override it (progress guarantee)
     prefill_chunk: int = 0      # chunked prefill piece size (0 = whole
                                 # prompt in one chunk)
     prefill_chunks_per_step: int = 1   # prefill chunks interleaved between
@@ -214,6 +240,7 @@ class Engine:
         # -- continuous-batching state (built lazily by _ensure_pool) --------
         self._pool = None
         self._paged = False
+        self.governor = None                        # paged memory governor
         self._build_step = None                     # plan -> compiled step
         self._slot_prefills: dict[int, Any] = {}    # feed_len -> jitted fn
         self._chunk_step = None                     # paged prefill-chunk fn
@@ -375,6 +402,22 @@ class Engine:
             return self.cfg.spec_depth
         return max(plan.config_for("layer0/attn").spec_depth, 0)
 
+    def reservation_for(self, plan: RegionPlan) -> str:
+        """Memory-reservation resolution, mirroring :meth:`spec_depth_for`:
+        an explicit ServeConfig value pins it; in auto mode the plan's
+        attn-region knob (the PlanDecider's mem_full/mem_lazy channel)
+        decides; unset means full (the preemption-free PR 2 behaviour)."""
+        if self.cfg.reservation in ("full", "lazy"):
+            return self.cfg.reservation
+        return plan.config_for("layer0/attn").reservation or "full"
+
+    def mem_watermark_for(self, plan: RegionPlan) -> float:
+        """Watermark resolution (same precedence as the other knobs)."""
+        if self.cfg.mem_watermark >= 0:
+            return self.cfg.mem_watermark
+        wm = plan.config_for("layer0/attn").mem_watermark
+        return wm if wm >= 0 else 0.1
+
     def _use_paged(self) -> bool:
         if self.cfg.paged == "off":
             return False
@@ -404,6 +447,11 @@ class Engine:
                                                dtype=self._param_dtype())
             self._pool = PagedKVPool(avals, self.cfg.max_slots, ps,
                                      n_pages, max_pages)
+            from repro.serve.memory import MemoryGovernor, MemoryPolicy
+            self.governor = MemoryGovernor(self._pool, MemoryPolicy(
+                reservation=self.reservation_for(self.plan),
+                watermark=self.mem_watermark_for(self.plan),
+                max_preempts=self.cfg.max_preempts))
             self._build_step = self._build_paged_step
         else:
             self._pool = SlotKVPool(self._slot_cache_avals(),
@@ -577,6 +625,13 @@ class Engine:
             self._append_bucket_obs(bucket, self._tap_acc.pop(bucket),
                                     old_cls)
         self._bucket_class[bucket] = cls_in_effect
+        # memory policy is decided on the same cadence as the plan: the
+        # governor's reservation/watermark follow the decided (or explored)
+        # class for the current bucket — an allocator-policy change, never
+        # a recompile (the step cache strips the knobs)
+        if self.governor is not None:
+            self.governor.set_policy(self.reservation_for(plan),
+                                     self.mem_watermark_for(plan))
         key = self._step_cache_key(plan)
         if key not in self._pool_steps:
             self._pool_steps[key] = self._build_step(plan)
@@ -672,6 +727,10 @@ class Engine:
         raw = _json.loads(plan.to_json())
         for rc in raw.get("regions", {}).values():
             rc.pop("page_size", None)
+            # memory-governor policy knobs steer admission/reclamation on
+            # the host, never the compiled step
+            rc.pop("reservation", None)
+            rc.pop("mem_watermark", None)
             if not self._spec_knob_live():
                 rc.pop("spec_depth", None)
         return _json.dumps(raw, sort_keys=True)
@@ -738,9 +797,13 @@ class Engine:
         slot's verified token chain ``out_np[slot, :n_cand[slot]]`` in
         order, recording tokens until the budget or EOS cuts the chain,
         then complete and release.  The plain one-token step is the
-        n_cand=1 case.  Returns {slot: tokens consumed this step}."""
+        n_cand=1 case; n_cand=0 marks a slot that sat out this step
+        (allocation-stalled: masked from the decode, nothing written).
+        Returns {slot: tokens consumed this step} over stepped slots."""
         consumed: dict[int, int] = {}
         for slot in list(sched.active):
+            if n_cand[slot] == 0:
+                continue
             req = sched.active[slot]
             eos = req.eos_id if req.eos_id is not None else self.cfg.eos_id
             c, done = 0, False
@@ -809,8 +872,23 @@ class Engine:
         return {"steps": steps}
 
     def _serve_paged(self, sched: Scheduler) -> dict:
-        """The paged-pool loop: reservation-based admission, prompt prefill
+        """The paged-pool loop: governor-mediated admission, prompt prefill
         in chunks interleaved with pool decode steps.
+
+        **Elastic memory** (:class:`repro.serve.memory.MemoryGovernor`):
+        admission routes through the governor — full reservation (the
+        preemption-free default) or lazy (prompt pages + one decode page,
+        watermark-gated).  Before every decode step each active slot's
+        reserved reach is grown to cover the step's K/V write (one page at
+        a time, at page boundaries); when the allocator runs dry the
+        governor picks a LIFO victim among resident decodes, its pages are
+        freed and the request re-queues through the scheduler's PREEMPTED
+        state — it re-enters as recompute-prefill over
+        prompt + generated-so-far, so greedy output stays bit-identical.
+        The oldest resident may override victims' ``max_preempts`` cap
+        (progress guarantee: the head of the line always finishes); a slot
+        that can neither grow nor reclaim *stalls* — masked out of this
+        step, retried next step.
 
         Between consecutive decode steps at most
         ``prefill_chunks_per_step`` prompt chunks run, so a long prompt is
@@ -831,6 +909,7 @@ class Engine:
         the non-speculative path.
         """
         pool = self._pool
+        gov = self.governor
         B = pool.n_slots
         pending = np.zeros((B,), np.int32)
         active = np.zeros((B,), bool)
@@ -840,15 +919,26 @@ class Engine:
         now = lambda: time.perf_counter() - t0  # noqa: E731
         steps = 0
         committed_total = 0                 # tokens committed by decode steps
-        slot_steps = 0                      # sum of active slots over steps
+        slot_steps = 0                      # sum of stepped slots over steps
         max_depth = 0                       # deepest speculation actually run
+        prev_stall: set = set()             # last step's stalled slot set
         # the DECODE-masked block tables change only when pool composition
-        # changes (admission / completion), not every step — cache the
-        # device array instead of re-uploading it per step
+        # changes (admission / completion / preemption / stall), not every
+        # step — cache the device array instead of re-uploading it per step
         bt_dev = {"arr": None, "dirty": True}
 
         def release_slot(slot):
             pool.release(slot)
+            bt_dev["dirty"] = True
+
+        def preempt_victim(victim):
+            """Evict a resident decode: pages back to the allocator, the
+            request to the scheduler's preempted queue (re-enters as
+            recompute-prefill over its committed history)."""
+            sched.preempt(sched.active[victim], now())
+            pool.preempt(victim)
+            active[victim] = False
+            pending[victim] = 0
             bt_dev["dirty"] = True
 
         def admit_ready(t):
@@ -856,15 +946,19 @@ class Engine:
                 req = sched.peek_ready(t)
                 if req is None:
                     return
-                need = req.prompt.size - 1 + req.max_new_tokens
-                slot = pool.admit(need)
+                # a preempted request re-enters as recompute-prefill over
+                # prompt + generated-so-far; its worst case is unchanged
+                # (every recomputed token replaces a remaining new one)
+                hist = req.token_history()
+                total = req.prompt.size - 1 + req.max_new_tokens
+                slot = gov.admit(hist.size, total)
                 if slot is None:            # head-of-line waits for memory
                     return
                 sched.pop_ready(t)
                 sched.bind_prefill(req, slot, now())
                 req.prefill_pos = 0
-                if req.prompt.size < 2:     # no prefix to prefill
-                    pending[slot] = int(req.prompt[-1])
+                if hist.size < 2:           # no prefix to prefill
+                    pending[slot] = int(hist[-1])
                     sched.start_decode(req)
                     active[slot] = True
                     bt_dev["dirty"] = True
@@ -879,7 +973,7 @@ class Engine:
             while budget > 0 and prefills:
                 req = prefills[0]
                 slot = req.slot
-                feed = req.prompt[:-1]
+                feed = req.token_history()[:-1]
                 # MoE capacity groups depend on the token-group length, so
                 # splitting a prompt would route (and drop) differently
                 # than whole-prompt prefill — keep MoE prompts one chunk
@@ -900,7 +994,7 @@ class Engine:
                 req.prefill_pos += true_c
                 budget -= 1
                 if req.prefill_pos >= feed.size:
-                    pending[slot] = int(req.prompt[-1])
+                    pending[slot] = int(req.token_history()[-1])
                     sched.start_decode(req)
                     active[slot] = True
                     bt_dev["dirty"] = True
@@ -922,6 +1016,49 @@ class Engine:
             t_step0 = time.perf_counter()
             D = self._spec_depth
             S = D + 1
+
+            # elastic headroom: every slot that steps needs its next K/V
+            # write inside reserved pages (else it lands in the null page
+            # and the sampled token is garbage).  Oldest-admitted slots
+            # grow first — consistent with LIFO victim selection — and the
+            # oldest may evict past the preempt cap so the head of the
+            # line always progresses; everyone else stalls when nothing is
+            # reclaimable.
+            stalled: list[int] = []
+            grown0 = gov.grown_pages
+            order = sorted(sched.active, key=lambda s: (
+                sched.active[s].t_admit or 0.0, sched.active[s].rid))
+            for i, slot in enumerate(order):
+                if slot not in sched.active:
+                    continue                # taken as an earlier victim
+                req = sched.active[slot]
+                cap = req.prompt.size - 1 + req.max_new_tokens
+                while (slot in sched.active
+                       and gov.ensure_headroom(slot, S, cap) < 1):
+                    # only strictly-younger residents are evictable (LIFO:
+                    # a slot never discards its own K/V — stalling keeps
+                    # it — and never inverts the order by evicting an
+                    # older request); the oldest may override the preempt
+                    # cap so the head of the line always finishes
+                    victim = gov.pick_victim(
+                        sched.active, ignore_cap=(i == 0),
+                        younger_than=(req.t_admit or 0.0, req.rid))
+                    if victim is None:
+                        stalled.append(slot)
+                        break
+                    preempt_victim(victim)
+            stalled = [s for s in stalled if s in sched.active]
+            if gov.grown_pages != grown0:
+                # growth extends block-table rows in place — the cached
+                # device copy is stale even though pool composition is not
+                bt_dev["dirty"] = True
+            if sched.active and len(stalled) == len(sched.active):
+                # every decode is out of pages and nothing is reclaimable:
+                # only resident prefills (whose pages are pre-reserved) can
+                # free the jam by finishing — keep prefilling, skip the step
+                gov.note_step(len(stalled))
+                continue
+
             max_depth = max(max_depth, D)
             toks_in = np.zeros((B, S), np.int32)
             toks_in[:, 0] = pending
@@ -929,17 +1066,26 @@ class Engine:
                 for slot, req in sched.active.items():
                     toks_in[slot, 1:] = draft_ngram(req.token_history(), D)
             key, sub = jax.random.split(key)
-            # expose only DECODE slots to the step (null page otherwise)
+            # expose only non-stalled DECODE slots to the step (null page
+            # otherwise); a stalled slot keeps its pending token and state
+            # untouched and simply retries next step
+            stall_arr = np.zeros((B,), bool)
+            stall_arr[stalled] = True
+            if set(stalled) != prev_stall:
+                prev_stall = set(stalled)
+                bt_dev["dirty"] = True
+            eff = active & ~stall_arr
             if bt_dev["dirty"]:
                 bt_dev["arr"] = jnp.asarray(
-                    pool.block_tables * active[:, None])
-                bt_dev["act"] = jnp.asarray(active)
+                    pool.block_tables * eff[:, None])
+                bt_dev["act"] = jnp.asarray(eff)
                 bt_dev["dirty"] = False
             out, pool.pages = self._pool_step(
                 self.params, pool.pages, jnp.asarray(toks_in),
-                bt_dev["arr"], jnp.asarray(pool.lengths * active),
+                bt_dev["arr"], jnp.asarray(pool.lengths * eff),
                 bt_dev["act"], sub)
             steps += 1
+            gov.note_step(len(stalled))
             out_np = np.asarray(out)
 
             # acceptance walk: draft i is valid iff it equals the verify
@@ -947,8 +1093,11 @@ class Engine:
             # draft held) — the longest such prefix commits
             n_cand = np.ones((B,), np.int32)
             written = {}
-            slot_steps += len(sched.active)
+            slot_steps += len(sched.active) - len(stalled)
             for slot in sched.active:
+                if stall_arr[slot]:
+                    n_cand[slot] = 0        # sat out: commit nothing
+                    continue
                 len0 = int(pool.lengths[slot])
                 # rows past the reach of the slot's *reserved* pages went
                 # to the null page; their logits are garbage, so cap
@@ -973,8 +1122,9 @@ class Engine:
                          "slot_steps": slot_steps,
                          "max_depth": max_depth,
                          # accepted drafts = tokens beyond the one each
-                         # active slot's step commits regardless
+                         # stepped slot's step commits regardless
                          "accepted_drafts":
                              committed_total - slot_steps,
                          "tokens_per_step":
-                             committed_total / max(steps, 1)}}
+                             committed_total / max(steps, 1)},
+                "memory": gov.summary()}

@@ -1,0 +1,209 @@
+"""Elastic KV-memory governor: lazy admission, watermark control, preemption.
+
+PRs 1-4 closed the paper's measure->decide loop over *compute* plans
+(attention impl, block sizes, speculation depth); KV **memory** stayed
+statically provisioned — admission reserved every request's full worst
+case up front, so the pool ran half-empty on short-generation traffic.
+The :class:`MemoryGovernor` extends the loop to allocation policy itself:
+
+* **Lazy admission** — a request enters with only
+  ``ceil(prompt_len / page_size)`` pages plus one decode page
+  (:meth:`repro.serve.cache.PagedKVPool.admit_pages`) and grows one page
+  at a time at page boundaries (:meth:`PagedKVPool.grow`) as generation
+  proceeds, so the pool's free list tracks *actual* occupancy instead of
+  the sum of worst cases — an overcommitted trace fits far more
+  concurrent requests into the same ``--kv-pages``.
+
+* **Watermark admission control** — new requests are admitted only while
+  the free list sits above ``watermark`` (a fraction of allocatable
+  pages), so decode growth for residents keeps headroom and admission
+  churn can't thrash the pool into preemption storms.  The watermark is
+  bypassed when the pool is empty (nothing resident could ever free a
+  page, so blocking would deadlock).
+
+* **Preemption** — when growth fails mid-step the governor picks a victim
+  (LIFO by admission time among resident decodes, each request protected
+  after ``max_preempts`` evictions), frees its pages
+  (:meth:`PagedKVPool.preempt`) and the engine re-queues it through the
+  scheduler's PREEMPTED state: it re-enters as recompute-prefill over
+  prompt + generated-so-far, so per-request greedy output is bit-identical
+  to a never-preempted run (equivalence-tested).  A slot that can neither
+  grow nor find a victim *stalls* — it is masked out of the decode step
+  (its write would land in the null page) and retried next step.
+
+* **Autotuned policy** — ``reservation`` (``mem_full`` / ``mem_lazy``)
+  and the watermark fraction are serve-only candidate classes
+  (:mod:`repro.autotune.candidates`), so the serve-time
+  :class:`repro.autotune.decider.PlanDecider` — or the epsilon-greedy
+  explorer — picks memory policy per load bucket from occupancy-scaled
+  counters, exactly the ppOpen-AT "change runtime execution parameters
+  from measurements" loop applied to the allocator.  The engine calls
+  :meth:`set_policy` on every replan; policy switches affect only future
+  admissions/growth, never already-resident state.
+
+The governor owns *policy and accounting*; page bookkeeping stays in
+:class:`repro.serve.cache.PagedKVPool` and lifecycle in
+:class:`repro.serve.scheduler.Scheduler` (the engine mediates, as for
+everything else in the serving loop).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping, Optional, Sequence
+
+from repro.serve.cache import PagedKVPool, pages_for
+
+
+@dataclasses.dataclass
+class MemoryPolicy:
+    """The governor's live knobs (mutated by :meth:`MemoryGovernor
+    .set_policy` when the PlanDecider re-decides)."""
+    reservation: str = "full"   # 'full' = worst case up front; 'lazy' = grow
+    watermark: float = 0.1      # lazy-admission free-page high watermark,
+                                # as a fraction of allocatable pages
+    max_preempts: int = 4       # per-request eviction cap (victim filter)
+
+
+class MemoryGovernor:
+    """Admission + reclamation policy for one :class:`PagedKVPool`."""
+
+    def __init__(self, pool: PagedKVPool, policy: Optional[MemoryPolicy] = None):
+        self.pool = pool
+        self.policy = policy or MemoryPolicy()
+        # -- taps (the measurement side of the loop) -------------------------
+        self.stall_steps = 0        # decode steps where >= 1 slot stalled
+        self.stall_slot_steps = 0   # slot-granular stall count
+        self.admit_blocked = 0      # admissions deferred by the watermark
+        self.grown_pages = 0        # pages added by lazy growth
+        self.peak_resident = 0      # max concurrent resident requests
+        self.free_page_trace: list[int] = []    # free pages per decode step
+
+    # -- policy ---------------------------------------------------------------
+    def set_policy(self, reservation: Optional[str] = None,
+                   watermark: Optional[float] = None) -> None:
+        """Install the (re)decided memory policy.  Only future admissions
+        and growth see it; resident reservations are never shrunk."""
+        if reservation in ("full", "lazy"):
+            self.policy.reservation = reservation
+        if watermark is not None and watermark >= 0:
+            self.policy.watermark = float(watermark)
+
+    # -- admission ------------------------------------------------------------
+    def admit(self, prompt_tokens: int, total_tokens: int) -> Optional[int]:
+        """Admit one request; returns its slot or None (head-of-line waits).
+
+        ``prompt_tokens`` is the length of the token history the slot must
+        hold before its first decode step (prompt + any recomputed
+        generation for a preempted request); ``total_tokens`` is the
+        request's worst case.  Full mode reserves ``total_tokens`` of
+        pages atomically; lazy mode takes the prompt's pages plus one
+        decode page — never more than the worst case — and only while the
+        free list stays above the watermark."""
+        pool = self.pool
+        if self.policy.reservation != "lazy":
+            slot = pool.admit(total_tokens)
+        else:
+            need = min(pages_for(prompt_tokens, pool.page_size) + 1,
+                       pages_for(total_tokens, pool.page_size))
+            allocatable = pool.n_pages - 1
+            if (pool.n_active > 0 and pool.allocator.n_free - need
+                    < self.policy.watermark * allocatable):
+                self.admit_blocked += 1
+                return None
+            slot = pool.admit_pages(need)
+        if slot is not None and pool.n_active > self.peak_resident:
+            self.peak_resident = pool.n_active
+        return slot
+
+    # -- growth ---------------------------------------------------------------
+    def ensure_headroom(self, slot: int, want_tokens: int,
+                        cap_tokens: int) -> int:
+        """Grow ``slot`` so its reserved reach covers the next decode write;
+        returns the headroom actually available (tokens past the current
+        length — 0 means the caller must reclaim a victim or stall).
+
+        The first token of headroom is *mandatory* (without it the step's
+        K/V write lands in the null page and the sampled token would be
+        garbage); growth toward ``want_tokens`` (the speculative block
+        width) is opportunistic — it stops at the watermark so speculation
+        never starves admission.  Growth never exceeds ``cap_tokens`` (the
+        request's own worst case), so a fully-reserved slot — or any slot
+        near its budget — never takes pages it cannot use."""
+        pool = self.pool
+        length = int(pool.lengths[slot])
+        reserved = pool.reserved_tokens(slot)
+        while reserved < length + 1:
+            if not pool.grow(slot):
+                return reserved - length
+            self.grown_pages += 1
+            reserved += pool.page_size
+        allocatable = pool.n_pages - 1
+        target = min(length + want_tokens, cap_tokens)
+        while (reserved < target
+               and pool.allocator.n_free - 1
+               >= self.policy.watermark * allocatable
+               and pool.grow(slot)):
+            self.grown_pages += 1
+            reserved += pool.page_size
+        return reserved - length
+
+    # -- reclamation ----------------------------------------------------------
+    def pick_victim(self, residents: Mapping[int, "object"],
+                    exclude: Sequence[int] = (),
+                    ignore_cap: bool = False,
+                    younger_than: Optional[tuple] = None) -> Optional[int]:
+        """LIFO victim selection over resident decodes: the most recently
+        admitted request loses its pages (it has sunk the least compute
+        and its re-prefill is cheapest).  ``younger_than`` — the
+        requester's own ``(t_admit, rid)`` admission key — restricts
+        eligibility to strictly younger residents, so a slot never evicts
+        itself (a stall preserves its K/V; self-eviction would discard
+        it) and never inverts the LIFO order by evicting someone older.
+        Requests already evicted ``max_preempts`` times are protected
+        unless ``ignore_cap`` (the engine's oldest-request progress
+        guarantee overrides the cap so the head of the line can always
+        finish).  Returns a slot id or None when nothing is eligible."""
+        best_key, best_slot = None, None
+        for slot, req in residents.items():
+            if slot in exclude:
+                continue
+            key = (req.t_admit if req.t_admit is not None else 0.0, req.rid)
+            if younger_than is not None and key <= younger_than:
+                continue
+            if not ignore_cap and req.n_preempts >= self.policy.max_preempts:
+                continue
+            if best_key is None or key > best_key:
+                best_key, best_slot = key, slot
+        return best_slot
+
+    # -- taps -----------------------------------------------------------------
+    def note_step(self, n_stalled: int) -> None:
+        """Record one decode step's memory state (the free-page trajectory
+        and stall counters the autotune corpus and reports read)."""
+        self.free_page_trace.append(self.pool.allocator.n_free)
+        if n_stalled:
+            self.stall_steps += 1
+            self.stall_slot_steps += n_stalled
+
+    def summary(self) -> dict:
+        """Machine-readable governor report (serve() returns it under
+        ``"memory"``; the launcher's ``[pool]`` line and BENCH_serve.json
+        print it next to the HBM high-water)."""
+        alloc = self.pool.allocator
+        trace = self.free_page_trace
+        stride = max(len(trace) // 64, 1)       # bounded trajectory sample
+        return {
+            "reservation": self.policy.reservation,
+            "watermark": self.policy.watermark,
+            "max_preempts": self.policy.max_preempts,
+            "preemptions": self.pool.n_preempts,
+            "stall_steps": self.stall_steps,
+            "stall_slot_steps": self.stall_slot_steps,
+            "admit_blocked": self.admit_blocked,
+            "grown_pages": self.grown_pages,
+            "peak_resident": self.peak_resident,
+            "free_pages_min": min(trace) if trace else alloc.n_free,
+            "free_pages_final": alloc.n_free,
+            "free_page_trace": trace[::stride][:64],
+            "fragmentation": alloc.free_run_histogram(),
+        }

@@ -12,6 +12,19 @@ progress); ``bind_prefill``/``start_decode`` split the old one-shot
 ``bind`` into those two transitions.  Completion is by per-request token
 budget (``max_new_tokens``) or an EOS token id.
 
+Under lazy page allocation a decoding request can additionally be
+**PREEMPTED** (:meth:`Scheduler.preempt`): the memory governor evicted it
+to reclaim its pages for an older request.  Preempted requests hold no
+slot; they re-enter through the normal admission path as
+recompute-prefill over prompt + generated-so-far, so their greedy token
+stream is bit-identical to an uninterrupted run.  Re-queue ordering is
+the no-starvation rule: *all* preempted requests are admissible ahead of
+fresh arrivals (FIFO among themselves — oldest preemption first), so a
+victim re-enters before the traffic that evicted it can queue-jump, and
+victim selection (LIFO by admission time, capped per request by
+``max_preempts``) can never pick the same request unboundedly while
+younger work proceeds.
+
 The scheduler owns lifecycle bookkeeping only; cache memory itself is
 owned by :class:`repro.serve.cache.PagedKVPool` /
 :class:`repro.serve.cache.SlotKVPool` (the engine mediates).
@@ -30,6 +43,7 @@ class RequestState(enum.Enum):
     WAITING = "waiting"
     PREFILL = "prefill"
     DECODE = "decode"
+    PREEMPTED = "preempted"     # evicted mid-decode; awaiting re-admission
     DONE = "done"
 
 
@@ -49,6 +63,9 @@ class Request:
     t_admit: Optional[float] = None     # seconds since serve() start
     t_first: Optional[float] = None     # first generated token
     t_done: Optional[float] = None
+    n_preempts: int = 0                 # times evicted by the governor
+    t_preempt: Optional[float] = None   # pending eviction timestamp
+    requeue_wait_s: float = 0.0         # total preempted->readmitted wait
 
     def __post_init__(self):
         self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
@@ -73,6 +90,7 @@ class Scheduler:
 
     def __init__(self):
         self._queue: deque[Request] = deque()
+        self.preempted: deque[Request] = deque()  # evicted; readmit first
         self.prefilling: dict[int, Request] = {}  # slot -> mid-prefill request
         self.active: dict[int, Request] = {}      # slot -> decoding request
         self.finished: list[Request] = []
@@ -88,14 +106,26 @@ class Scheduler:
 
     # -- admission -----------------------------------------------------------
     def has_ready(self, now_s: float) -> bool:
-        return bool(self._queue) and self._queue[0].arrival_s <= now_s
+        return bool(self.preempted) or (
+            bool(self._queue) and self._queue[0].arrival_s <= now_s)
 
     def peek_ready(self, now_s: float) -> Optional[Request]:
         """The next admissible request, left on the queue (admission
-        control checks its memory reservation before popping)."""
+        control checks its memory reservation before popping).  Preempted
+        requests come first — they already arrived and paid for their
+        eviction — FIFO among themselves, then the arrival queue."""
+        if self.preempted:
+            return self.preempted[0]
         return self._queue[0] if self.has_ready(now_s) else None
 
     def pop_ready(self, now_s: float) -> Optional[Request]:
+        if self.preempted:
+            req = self.preempted.popleft()
+            req.state = RequestState.PREFILL
+            if req.t_preempt is not None:
+                req.requeue_wait_s += max(now_s - req.t_preempt, 0.0)
+                req.t_preempt = None
+            return req
         if not self.has_ready(now_s):
             return None
         req = self._queue.popleft()
@@ -127,6 +157,21 @@ class Scheduler:
         self.bind_prefill(req, slot, now_s)
         self.start_decode(req)
 
+    # -- preemption ----------------------------------------------------------
+    def preempt(self, req: Request, now_s: float) -> None:
+        """Evict an active decode: the request loses its slot (the caller
+        frees its pages) and re-queues ahead of fresh arrivals.  Its
+        committed ``out_tokens`` survive — re-admission recomputes their
+        K/V as prefill, so the continued token stream is bit-identical."""
+        if self.active.get(req.slot) is not req:
+            raise ValueError(f"request {req.rid} not active on slot {req.slot}")
+        del self.active[req.slot]
+        req.slot = None
+        req.state = RequestState.PREEMPTED
+        req.n_preempts += 1
+        req.t_preempt = now_s
+        self.preempted.append(req)
+
     # -- completion ----------------------------------------------------------
     def complete(self, req: Request, now_s: float) -> None:
         if self.active.get(req.slot) is not req:
@@ -138,9 +183,12 @@ class Scheduler:
         self.finished.append(req)
 
     def done(self) -> bool:
-        return not self._queue and not self.active and not self.prefilling
+        return (not self._queue and not self.preempted and not self.active
+                and not self.prefilling)
 
     def next_arrival(self) -> Optional[float]:
+        if self.preempted:
+            return 0.0                  # already arrived: admissible now
         return self._queue[0].arrival_s if self._queue else None
 
 
@@ -156,6 +204,8 @@ def summarize(requests: Sequence[Request]) -> dict:
     ttft = np.array([r.t_first - r.arrival_s for r in done
                      if r.t_first is not None])
     span = max(t_end - t_start, 1e-9)
+    preempted = [r for r in requests if r.n_preempts]
+    waits = np.array([r.requeue_wait_s for r in preempted])
     return {
         "n_done": len(done),
         "tokens": tokens,
@@ -164,4 +214,11 @@ def summarize(requests: Sequence[Request]) -> dict:
         "latency_p50_s": float(np.percentile(lat, 50)),
         "latency_p99_s": float(np.percentile(lat, 99)),
         "ttft_p50_s": float(np.percentile(ttft, 50)) if ttft.size else 0.0,
+        # preemption accounting (zeros on preemption-free traces)
+        "preempts": int(sum(r.n_preempts for r in requests)),
+        "preempted_requests": len(preempted),
+        "preempts_by_rid": {r.rid: r.n_preempts for r in preempted},
+        "requeue_wait_p50_s": (float(np.percentile(waits, 50))
+                               if waits.size else 0.0),
+        "requeue_wait_max_s": float(waits.max()) if waits.size else 0.0,
     }

@@ -267,14 +267,25 @@ def test_explorer_budget_caps_exploration():
     assert len(taken) == 3 and ex.explored == 3 and not ex.active
     for cls, plan in taken:
         # the explored candidate's knob is actually set on the plan copy
-        assert cls in {"spec0", "spec2", "spec4"}
-        assert plan.config_for("layer3/attn").spec_depth == int(cls[-1])
+        rc = plan.config_for("layer3/attn")
+        if cls.startswith("spec"):
+            assert rc.spec_depth == int(cls[-1])
+        elif cls == "mem_full":
+            assert rc.reservation == "full"
+        else:
+            assert cls.startswith("mem_lazy") and rc.reservation == "lazy"
 
 
 def test_explorer_menu_is_the_serve_only_classes():
     from repro.autotune.candidates import explore_menu
-    assert {c.name for c in explore_menu()} == {"spec0", "spec2", "spec4"}
+    assert {c.name for c in explore_menu()} == {
+        "spec0", "spec2", "spec4",
+        "mem_full", "mem_lazy", "mem_lazy_wm10", "mem_lazy_wm30"}
     assert all(c.serve_only for c in explore_menu())
+    # the watermark variants carry their fraction on the config
+    wm = {c.name: c.config.mem_watermark for c in explore_menu()
+          if c.name.startswith("mem_lazy_wm")}
+    assert wm == {"mem_lazy_wm10": 0.10, "mem_lazy_wm30": 0.30}
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,244 @@
+"""Elastic KV-memory subsystem: MemoryGovernor policy units (lazy
+admission, watermark, growth, victim selection) and the engine-level
+overcommit lifecycle — preemption + recompute-prefill resume completes
+every request with greedy tokens bit-identical to an unconstrained run."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_config
+from repro.models.model import build
+from repro.serve.cache import PagedKVPool, pages_for
+from repro.serve.engine import Engine, ServeConfig
+from repro.serve.memory import MemoryGovernor, MemoryPolicy
+from repro.serve.scheduler import Request, RequestState, summarize
+
+
+def _pool(n_pages=13, ps=8, n_slots=6, max_pages=5):
+    avals = {"k": jax.ShapeDtypeStruct((n_pages, ps, 1, 2), jnp.float32)}
+    return PagedKVPool(avals, n_slots, ps, n_pages, max_pages)
+
+
+# ---------------------------------------------------------------------------
+# Governor policy units (pure host logic)
+# ---------------------------------------------------------------------------
+
+
+def test_lazy_admit_takes_prompt_pages_plus_one():
+    pool = _pool()
+    gov = MemoryGovernor(pool, MemoryPolicy(reservation="lazy", watermark=0.0))
+    slot = gov.admit(prompt_tokens=9, total_tokens=40)   # 2 + 1 decode page
+    assert slot is not None
+    assert len(pool.allocator.pages_of(slot)) == 3
+    # full mode on the same demand reserves the whole worst case
+    gov.set_policy(reservation="full")
+    slot2 = gov.admit(prompt_tokens=9, total_tokens=40)
+    assert len(pool.allocator.pages_of(slot2)) == pages_for(40, 8)
+    assert gov.peak_resident == 2
+
+
+def test_lazy_admit_never_exceeds_worst_case():
+    pool = _pool(ps=8)
+    gov = MemoryGovernor(pool, MemoryPolicy(reservation="lazy", watermark=0.0))
+    # a tiny request whose worst case is ONE page must not take two
+    slot = gov.admit(prompt_tokens=3, total_tokens=6)
+    assert len(pool.allocator.pages_of(slot)) == 1
+
+
+def test_watermark_blocks_admission_but_not_into_deadlock():
+    pool = _pool(n_pages=13)              # 12 allocatable
+    gov = MemoryGovernor(pool, MemoryPolicy(reservation="lazy",
+                                            watermark=0.5))
+    # empty pool: the watermark is bypassed (nothing resident could ever
+    # free a page, so blocking would deadlock)
+    s0 = gov.admit(prompt_tokens=9, total_tokens=40)     # takes 3 pages
+    assert s0 is not None
+    # 9 free of 12; admitting 3 more would leave 6 = exactly the watermark
+    assert gov.admit(prompt_tokens=9, total_tokens=40) is not None
+    # 6 free; 6 - 3 = 3 < 0.5 * 12 -> blocked
+    assert gov.admit(prompt_tokens=9, total_tokens=40) is None
+    assert gov.admit_blocked == 1
+    gov.set_policy(watermark=0.0)
+    assert gov.admit(prompt_tokens=9, total_tokens=40) is not None
+
+
+def test_ensure_headroom_grows_at_boundary_and_respects_cap():
+    pool = _pool(n_pages=13, ps=8)
+    gov = MemoryGovernor(pool, MemoryPolicy(reservation="lazy",
+                                            watermark=0.0))
+    slot = gov.admit(prompt_tokens=9, total_tokens=40)   # 3 pages, reach 24
+    pool.advance(slot, 23)
+    # inside the reserved reach: nothing to do
+    assert gov.ensure_headroom(slot, 1, 40) == 1
+    assert gov.grown_pages == 0
+    pool.advance(slot, 1)                 # len 24 == reach: next write needs
+    assert gov.ensure_headroom(slot, 1, 40) == 8         # one fresh page
+    assert gov.grown_pages == 1
+    # opportunistic growth toward a speculative block stops at the cap:
+    # len 24, want 24 more, but the request's worst case is 40 tokens
+    got = gov.ensure_headroom(slot, 24, 40)
+    assert got == 16                      # 5 pages = 40 tokens reach, not 48
+    assert pool.reserved_tokens(slot) == 40
+
+
+def test_ensure_headroom_opportunistic_growth_respects_watermark():
+    pool = _pool(n_pages=13, ps=8)
+    gov = MemoryGovernor(pool, MemoryPolicy(reservation="lazy",
+                                            watermark=0.75))
+    slot = pool.admit_pages(2)            # reach 16, 10 free of 12
+    pool.advance(slot, 16)
+    # the mandatory page ignores the watermark (else the slot deadlocks)...
+    assert gov.ensure_headroom(slot, 8, 64) >= 1
+    # ...but speculative growth stopped at it (9 free == 0.75 * 12)
+    assert pool.reserved_tokens(slot) == 24
+
+
+@dataclasses.dataclass
+class _Res:
+    rid: int
+    t_admit: float
+    n_preempts: int = 0
+
+
+def test_pick_victim_lifo_cap_and_overrides():
+    pool = _pool()
+    gov = MemoryGovernor(pool, MemoryPolicy(max_preempts=2))
+    residents = {0: _Res(0, 0.1), 1: _Res(1, 0.3), 2: _Res(2, 0.2)}
+    assert gov.pick_victim(residents) == 1               # youngest admit
+    # only strictly-younger residents are evictable: the middle requester
+    # can evict slot 1, never itself or the older slot 0
+    assert gov.pick_victim(residents, younger_than=(0.2, 2)) == 1
+    # the youngest requester finds no victim -> it stalls instead of
+    # discarding its own K/V or inverting the LIFO order
+    assert gov.pick_victim(residents, younger_than=(0.3, 1)) is None
+    residents[1].n_preempts = 2                          # capped out
+    assert gov.pick_victim(residents) == 2
+    assert gov.pick_victim(residents, exclude=(2,)) == 0
+    # a capped youngest never drags down an older request either
+    assert gov.pick_victim(residents, younger_than=(0.2, 2)) is None
+    for r in residents.values():
+        r.n_preempts = 2
+    assert gov.pick_victim(residents) is None            # all protected
+    assert gov.pick_victim(residents, ignore_cap=True) == 1
+    assert gov.pick_victim({}) is None
+
+
+# ---------------------------------------------------------------------------
+# Engine lifecycle: overcommit -> preempt -> resume, bit-identical
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def oc():
+    """Model, params, the overcommit trace, and its reference tokens from
+    an unconstrained (never-preempting) pool."""
+    cfg = get_config("stablelm-1.6b").reduced()
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0), dtype=jnp.float32)
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab_size, (6, 8)).astype(np.int32)
+    gens = [20, 20, 24, 20, 20, 24]
+
+    def mk():
+        return [Request(rid=i, prompt=prompts[i].copy(), max_new_tokens=g)
+                for i, g in enumerate(gens)]
+
+    max_len = 8 + 24 + 1
+    ref = Engine(model, params, serve_cfg=ServeConfig(
+        max_len=max_len, max_slots=4, page_size=8, prefill_chunk=8))
+    ref_reqs = mk()
+    ref.serve(ref_reqs)
+    return model, params, max_len, mk, [r.out_tokens for r in ref_reqs]
+
+
+def _oc_engine(model, params, max_len, **kw):
+    base = dict(max_len=max_len, max_slots=4, page_size=8, prefill_chunk=8,
+                kv_pages=11, reservation="lazy", mem_watermark=0.0)
+    base.update(kw)
+    return Engine(model, params, serve_cfg=ServeConfig(**base))
+
+
+def test_overcommit_preempts_completes_all_bit_identical(oc):
+    """Sustained overcommit (6 decode-heavy requests over 10 allocatable
+    pages): lazy admission preempts, every preempted request re-enters
+    and completes (no starvation), and each request's greedy stream is
+    bit-identical to the unconstrained run."""
+    model, params, max_len, mk, ref_tokens = oc
+    eng = _oc_engine(model, params, max_len)
+    reqs = mk()
+    res = eng.serve(reqs)
+    mem = res["memory"]
+    assert mem["reservation"] == "lazy"
+    assert mem["preemptions"] >= 1, mem
+    for r, want in zip(reqs, ref_tokens):
+        assert r.state is RequestState.DONE
+        assert r.out_tokens == want, f"req {r.rid} diverged after preemption"
+    s = summarize(reqs)
+    assert s["n_done"] == len(reqs)
+    assert s["preempts"] == mem["preemptions"]
+    assert s["preempted_requests"] >= 1
+    assert set(s["preempts_by_rid"]) <= {r.rid for r in reqs}
+    assert s["requeue_wait_max_s"] >= s["requeue_wait_p50_s"] >= 0
+    # pages all returned; governor taps populated
+    eng._pool.allocator.check_invariants()
+    assert eng._pool.allocator.n_live == 0
+    assert mem["grown_pages"] >= 1
+    assert len(mem["free_page_trace"]) >= 1
+    assert sum(n * c for n, c in mem["fragmentation"].items()) == 10
+
+
+def test_overcommit_capped_victims_stall_not_starve(oc):
+    """max_preempts=0 protects every request from (cap-respecting)
+    eviction: growth failures surface as allocation stalls — the slot is
+    masked out of the step and retried — yet the oldest resident's
+    progress guarantee still drains the trace, bit-identically."""
+    model, params, max_len, mk, ref_tokens = oc
+    eng = _oc_engine(model, params, max_len, max_preempts=0)
+    reqs = mk()
+    res = eng.serve(reqs)
+    mem = res["memory"]
+    assert mem["stall_steps"] >= 1, mem
+    for r, want in zip(reqs, ref_tokens):
+        assert r.state is RequestState.DONE
+        assert r.out_tokens == want, f"req {r.rid} diverged after stalls"
+    eng._pool.allocator.check_invariants()
+    assert eng._pool.allocator.n_live == 0
+
+
+def test_full_reservation_never_preempts_under_overcommit(oc):
+    """The preemption-free contract of full reservation survives the same
+    overcommitted trace: fewer in-flight, zero preemptions/stalls."""
+    model, params, max_len, mk, ref_tokens = oc
+    eng = _oc_engine(model, params, max_len, reservation="full")
+    reqs = mk()
+    res = eng.serve(reqs)
+    mem = res["memory"]
+    assert mem["preemptions"] == 0 and mem["stall_steps"] == 0
+    for r, want in zip(reqs, ref_tokens):
+        assert r.out_tokens == want
+
+
+def test_auto_reservation_follows_dtree_vote(oc):
+    """--reservation auto: a tree voting the mem_lazy candidate switches
+    the governor's policy at replan time (the counters->decision loop
+    driving the allocator), without changing tokens."""
+    from repro.core.counters import Counters
+    from repro.core.dtree import DecisionTree, features
+    model, params, max_len, mk, ref_tokens = oc
+    X = np.stack([features(Counters(flops=1e9, bytes=1e9)),
+                  features(Counters(flops=1e12, bytes=1e10))])
+    tree = DecisionTree().fit(X, ["mem_lazy", "mem_lazy"])
+    eng = Engine(model, params, dtree=tree, serve_cfg=ServeConfig(
+        max_len=max_len, max_slots=4, page_size=8, prefill_chunk=8,
+        kv_pages=11, reservation="auto"))
+    assert eng.reservation_for(eng.plan) == "full"       # unset -> full
+    reqs = mk()
+    res = eng.serve(reqs)
+    assert eng.governor.policy.reservation == "lazy"
+    assert any(cls == "mem_lazy" for _, dec in res["decisions"]
+               for _r, cls in dec)
+    for r, want in zip(reqs, ref_tokens):
+        assert r.out_tokens == want

@@ -168,6 +168,111 @@ def test_pool_multi_token_append_rollback_properties(ops):
     assert pool.allocator.n_live == 0 and pool.n_free == n_slots
 
 
+@settings(max_examples=20)
+@given(ops=st.lists(st.integers(min_value=0, max_value=11),
+                    min_size=1, max_size=50))
+def test_pool_lazy_grow_preempt_resume_properties(ops):
+    """Random lazy-admit / grow / advance / preempt / resume / release
+    interleavings (the elastic-memory lifecycle): page conservation holds
+    at every step, block tables never alias, a slot's length never
+    exceeds the reach of the pages it actually holds, preemption returns
+    every page to the free list, and a preempted demand can always be
+    re-admitted once enough pages are free (recompute-prefill resume)."""
+    ps, n_slots, n_pages = 4, 3, 11
+    avals = {"k": jax.ShapeDtypeStruct((n_pages, ps, 1, 2), jnp.float32)}
+    pool = PagedKVPool(avals, n_slots, ps, n_pages, max_pages_per_slot=4)
+    rng = np.random.default_rng(sum(ops) * 977 + len(ops))
+    held: list[int] = []
+    preempted_demands: list[int] = []     # page counts awaiting resume
+    for op in ops:
+        if op <= 2:                       # lazy admit: prompt pages + 1
+            n = int(rng.integers(1, 4))
+            slot = pool.admit_pages(n)
+            if slot is not None:
+                held.append(slot)
+        elif op <= 4 and preempted_demands:   # resume a preempted request
+            n = preempted_demands[0]
+            slot = pool.admit_pages(n)
+            if slot is not None:
+                preempted_demands.pop(0)
+                held.append(slot)
+        elif op <= 6 and held:            # grow one page at a boundary
+            slot = int(rng.choice(held))
+            before = len(pool.allocator.pages_of(slot))
+            grew = pool.grow(slot)
+            after = len(pool.allocator.pages_of(slot))
+            assert after == before + (1 if grew else 0)
+        elif op <= 8 and held:            # advance within reserved reach
+            slot = int(rng.choice(held))
+            room = pool.reserved_tokens(slot) - int(pool.lengths[slot])
+            if room > 0:
+                pool.advance(slot, int(rng.integers(1, room + 1)))
+        elif op <= 9 and held:            # preempt a victim
+            slot = held.pop(int(rng.integers(len(held))))
+            n_held = len(pool.allocator.pages_of(slot))
+            free0 = pool.allocator.n_free
+            freed = pool.preempt(slot)
+            assert freed == n_held
+            assert pool.allocator.n_free == free0 + n_held
+            assert (pool.block_tables[slot] == 0).all()
+            preempted_demands.append(min(n_held + 1, 4))
+        elif held:                        # release a finished request
+            pool.release(held.pop(int(rng.integers(len(held)))))
+        pool.allocator.check_invariants()
+        rows = {s: set(pool.block_tables[s][pool.block_tables[s] > 0])
+                for s in held}
+        for a in held:
+            assert int(pool.lengths[a]) <= pool.reserved_tokens(a)
+            for b in held:
+                if a < b:
+                    assert not rows[a] & rows[b], "block tables alias"
+    for slot in held:
+        pool.release(slot)
+    assert pool.allocator.n_live == 0 and pool.n_free == n_slots
+    # every preempted demand is re-admittable from an empty pool
+    for n in preempted_demands:
+        slot = pool.admit_pages(n)
+        assert slot is not None
+        pool.release(slot)
+
+
+def test_pool_grow_guards_and_bounds():
+    avals = {"k": jax.ShapeDtypeStruct((7, 4, 1, 2), jnp.float32)}
+    pool = PagedKVPool(avals, 2, 4, 7, max_pages_per_slot=3)
+    with pytest.raises(ValueError):
+        pool.grow(0)                      # inactive slot
+    slot = pool.admit_pages(1)
+    assert pool.reserved_tokens(slot) == 4
+    assert pool.grow(slot)                # 2nd page
+    assert pool.reserved_tokens(slot) == 8
+    other = pool.admit_pages(3)           # holds its max; 1 page left free
+    assert other is not None
+    assert not pool.grow(other)           # block table full (max 3 pages)
+    assert pool.admit_pages(4) is None    # beyond max_pages_per_slot
+    assert pool.grow(slot)                # takes the last free page
+    assert not pool.grow(slot)            # table full AND allocator dry
+    pool.allocator.check_invariants()
+    assert pool.preempt(other) == 3
+    assert pool.n_preempts == 1
+    assert pool.allocator.n_free == 3
+    pool.release(slot)
+    assert pool.allocator.n_live == 0
+
+
+def test_allocator_free_run_histogram():
+    a = PageAllocator(10)                 # pages 1..9 free: one run of 9
+    assert a.free_run_histogram() == {9: 1}
+    a.alloc("r0", 3)                      # takes 1,2,3
+    a.alloc("r1", 2)                      # takes 4,5
+    a.free("r0")                          # free: 1,2,3 + 6..9
+    hist = a.free_run_histogram()
+    assert hist == {3: 1, 4: 1}
+    assert sum(n * c for n, c in hist.items()) == a.n_free
+    a.free("r1")
+    assert a.free_run_histogram() == {9: 1}
+    assert PageAllocator(2).free_run_histogram() == {1: 1}
+
+
 def test_pool_rollback_guards():
     avals = {"k": jax.ShapeDtypeStruct((9, 4, 1, 2), jnp.float32)}
     pool = PagedKVPool(avals, 2, 4, 9, max_pages_per_slot=2)

@@ -111,6 +111,49 @@ def test_scheduler_bind_complete_invariants():
     assert {r.rid for r in sched.finished} == {0, 1, 2}
 
 
+def test_scheduler_preempt_requeue_ordering_and_waits():
+    """Preempted requests re-enter ahead of fresh arrivals (no-starvation
+    ordering), FIFO among themselves, accumulating their requeue wait;
+    done() accounts for them."""
+    sched = Scheduler()
+    for i in range(4):
+        sched.submit(_req(i))
+    a = sched.pop_ready(0.0)
+    b = sched.pop_ready(0.0)
+    sched.bind(a, 0, 0.0)
+    sched.bind(b, 1, 0.1)
+    sched.preempt(b, 1.0)
+    assert b.state is RequestState.PREEMPTED
+    assert b.slot is None and b.n_preempts == 1
+    sched.preempt(a, 2.0)
+    with pytest.raises(ValueError):       # not active any more
+        sched.preempt(a, 2.0)
+    assert not sched.done()               # preempted requests still pending
+    # b (preempted first) re-enters first, before the waiting queue
+    assert sched.peek_ready(10.0) is b
+    r = sched.pop_ready(3.0)
+    assert r is b and b.state is RequestState.PREFILL
+    assert b.requeue_wait_s == pytest.approx(2.0)
+    r = sched.pop_ready(5.0)
+    assert r is a and a.requeue_wait_s == pytest.approx(3.0)
+    # only now does the fresh queue drain
+    assert sched.pop_ready(10.0).rid == 2
+    # a twice-preempted request accumulates waits and counts
+    sched.bind(b, 1, 5.0)
+    sched.preempt(b, 6.0)
+    assert sched.next_arrival() == 0.0    # admissible immediately
+    sched.pop_ready(6.5)
+    assert b.n_preempts == 2
+    assert b.requeue_wait_s == pytest.approx(2.5)
+    sched.bind(b, 1, 6.5)
+    sched.complete(b, 7.0)
+    s = summarize([b])
+    assert s["preempts"] == 2 and s["preempted_requests"] == 1
+    assert s["preempts_by_rid"] == {b.rid: 2}
+    assert s["requeue_wait_p50_s"] == pytest.approx(2.5)
+    assert s["requeue_wait_max_s"] == pytest.approx(2.5)
+
+
 def test_slot_pool_alloc_free_write():
     avals = {"k": jax.ShapeDtypeStruct((1, 4, 2), jnp.float32),
              "pos": jax.ShapeDtypeStruct((), jnp.int32)}
