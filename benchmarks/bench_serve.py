@@ -45,6 +45,16 @@ unconstrained pool (asserted here, gated by CI's ``overcommit-smoke``
 job via ``ratios.lazy_vs_full_inflight``).  ``--overcommit-only`` runs
 just this section.
 
+The **prefix rows** compare ``--prefix-cache on`` vs ``off`` engines at
+the same ``kv_pages`` on a shared-prompt trace: repeated prompts must
+admit off the cached pages with >= 5x faster TTFT, save real prefill
+tokens, copy-on-write before any shared-page write, and stay
+bit-identical wave by wave; a second, tight lazy-pool trace checks that
+victim selection diverts preemption off the resident sharing cached
+pages (``shared_spared``).  Gated by CI's ``prefix-smoke`` job via
+``ratios.prefix_hit_ttft_speedup``; ``--prefix-only`` runs just this
+section.
+
 Row format: ``name,us_per_token,tok_per_s`` (plus derived ratio rows).
 After a run, :data:`json_summary` holds the machine-readable record
 (tok/s, latency percentiles, TTFT for every path, HBM high-water,
@@ -95,6 +105,24 @@ KV_PAGES_OC = 13                       # 12 allocatable pages: room for just
                                        # under full reservation
 
 json_summary: dict = {}
+
+# -- prefix section (cross-request prefix caching: warm vs cold TTFT) --------
+PROMPT_PF = 96                 # 12 full pages of shared prefix: a cache-hit
+                               # admission skips all 12 prefill chunks, so the
+                               # warm/cold TTFT ratio measures skipped
+                               # launches, not scheduler jitter
+PAGE_PF = 8
+GEN_PF = 8
+SLOTS_PF = 2
+KV_PAGES_PF = 29               # IDENTICAL for warm and cold (2 slots x 14
+                               # worst-case pages + null page): the cold path
+                               # fits comfortably, so any win is policy, not
+                               # capacity
+# eviction trace: a tight lazy pool where pure-LIFO victim selection would
+# evict the request mapping the 12 shared prefix pages; the governor must
+# divert the preemption to an unshared (cheaper) resident instead
+KV_PAGES_EV = 20
+MAX_LEN_EV = 109
 
 
 def _trace(vocab: int, n_req: int = N_REQ) -> list[Request]:
@@ -276,6 +304,152 @@ def _overcommit_section(model, params, vocab: int) -> tuple[list, dict]:
     return rows, oc
 
 
+def _prefix_section(model, params, vocab: int) -> tuple[list, dict]:
+    """Cross-request prefix caching: warm (``--prefix-cache on``) vs cold
+    (``off``) engines at the SAME ``--kv-pages``, served the same three
+    waves — A populates the index, B repeats the full 96-token prompt
+    (full hits: admission maps the cached pages and decodes immediately),
+    C shares only the first 48 tokens (partial hits: prefill covers just
+    the suffix).  Gates: wave-B TTFT >= 5x faster warm than cold, prefill
+    tokens saved > 0, at least one copy-on-write (the full hit's first
+    decode write lands mid-shared-page), and every wave bit-identical
+    between the two engines.
+
+    A second, deliberately tight lazy-pool trace checks the governor's
+    shared-page victim scoring: the LIFO-preferred victim maps all 12
+    shared prefix pages, so the preemption must be diverted to an
+    unshared resident (``shared_spared >= 1``) — evicting the sharer
+    would forfeit every future hit's recompute at once."""
+    rng = np.random.default_rng(11)
+    P = rng.integers(0, vocab, PROMPT_PF).astype(np.int32)
+    div = [np.concatenate([P[:48],
+                           rng.integers(0, vocab, 16).astype(np.int32)])
+           for _ in range(2)]
+
+    def wave_a():
+        return [Request(rid=0, prompt=P.copy(), max_new_tokens=GEN_PF)]
+
+    def wave_b():
+        return [Request(rid=i, prompt=P.copy(), max_new_tokens=GEN_PF)
+                for i in (1, 2)]
+
+    def wave_c():
+        return [Request(rid=3 + i, prompt=d.copy(), max_new_tokens=GEN_PF)
+                for i, d in enumerate(div)]
+
+    common = dict(max_len=PROMPT_PF + GEN_PF + 1, max_slots=SLOTS_PF,
+                  page_size=PAGE_PF, prefill_chunk=PAGE_PF, spec_depth=0,
+                  kv_pages=KV_PAGES_PF)
+    warm = Engine(model, params, serve_cfg=ServeConfig(
+        **common, prefix_cache="on"))
+    cold = Engine(model, params, serve_cfg=ServeConfig(
+        **common, prefix_cache="off"))
+
+    outs = {}
+    for tag, eng in (("warm", warm), ("cold", cold)):
+        reqs_a = wave_a()                 # wave A doubles as compile warm-up
+        eng.serve(reqs_a)                 # for both engines (same shapes)
+        outs[tag, "a"] = reqs_a
+        best = None                       # best-of-2 on the measured wave:
+        for _ in range(2):                # sub-ms TTFTs are jitter-prone
+            reqs_b = wave_b()
+            stats_b = eng.serve(reqs_b)["stats"]
+            if best is None or stats_b["ttft_p50_s"] < best[1]["ttft_p50_s"]:
+                best = (reqs_b, stats_b)
+        outs[tag, "b"], outs[tag, "bs"] = best
+        reqs_c = wave_c()
+        outs[tag, "cs"] = eng.serve(reqs_c)["stats"]
+        outs[tag, "c"] = reqs_c
+    for w in ("a", "b", "c"):
+        for rw, rc in zip(outs["warm", w], outs["cold", w]):
+            assert rw.out_tokens == rc.out_tokens, (
+                f"prefix cache changed request {rw.rid}'s tokens (wave {w})")
+    pf = warm._pool.prefix_stats()
+    assert pf["tokens_saved"] > 0, "warm engine never hit its own index"
+    assert pf["cow_copies"] >= 1, "full hit's mid-page write never CoW'd"
+    assert outs["warm", "bs"]["prefix_hit_requests"] == 2
+    warm_ttft = outs["warm", "bs"]["ttft_p50_s"]
+    cold_ttft = outs["cold", "bs"]["ttft_p50_s"]
+    speedup = cold_ttft / max(warm_ttft, 1e-9)
+
+    # -- eviction trace: shared-page victim scoring under real serving -------
+    ev_common = dict(max_len=MAX_LEN_EV, max_slots=3, page_size=PAGE_PF,
+                     prefill_chunk=PAGE_PF, spec_depth=0)
+    ev = Engine(model, params, serve_cfg=ServeConfig(
+        **ev_common, kv_pages=KV_PAGES_EV, reservation="lazy",
+        mem_watermark=0.0, prefix_cache="on"))
+    ref = Engine(model, params, serve_cfg=ServeConfig(
+        **ev_common, prefix_cache="off"))      # unconstrained reference
+    rng2 = np.random.default_rng(13)
+    p1 = rng2.integers(0, vocab, 8).astype(np.int32)
+    p2 = rng2.integers(0, vocab, 12).astype(np.int32)
+
+    def donor():
+        # publishes the 12-page prefix run, then leaves the pool
+        return [Request(rid=0, prompt=P.copy(), max_new_tokens=1)]
+
+    def burst():
+        # admitted in rid order: rid 3 (the sharer) is youngest, so pure
+        # LIFO would evict it when rid 1 outgrows its lazy reservation.
+        # The sharer's prompt extends ONE token past the cached run, so
+        # its first decode write lands on a fresh page — it never CoWs a
+        # shared page (a CoW would orphan that page to the index alone,
+        # handing rid 1's growth a reclaimable page and defusing the
+        # preemption this trace exists to force)
+        p3 = np.concatenate([P, P[:1]])
+        return [Request(rid=1, prompt=p1.copy(), max_new_tokens=20),
+                Request(rid=2, prompt=p2.copy(), max_new_tokens=12),
+                Request(rid=3, prompt=p3, max_new_tokens=12)]
+
+    ev.serve(donor())
+    ref.serve(donor())
+    ev_b, ref_b = burst(), burst()
+    res_ev = ev.serve(ev_b)
+    ref.serve(ref_b)
+    for a, b in zip(ev_b, ref_b):
+        assert a.out_tokens == b.out_tokens, (
+            f"prefix-aware preemption changed request {a.rid}'s tokens")
+    mem_ev = res_ev["memory"]
+    assert mem_ev["shared_spared"] >= 1, (
+        "governor never diverted a preemption off the sharer")
+
+    rows = [
+        f"serve_prefix_cold_ttft_ms,{cold_ttft*1e3:.2f},full_prefill",
+        f"serve_prefix_warm_ttft_ms,{warm_ttft*1e3:.2f},cache_hit",
+        f"serve_prefix_hit_ttft_speedup,{speedup:.1f},gate>=5",
+        (f"serve_prefix_tokens_saved,{pf['tokens_saved']},"
+         f"cow={pf['cow_copies']}_evictions={pf['evictions']}"),
+        (f"serve_prefix_shared_spared,{mem_ev['shared_spared']},"
+         f"gate>=1_preempts={mem_ev['preemptions']}"),
+    ]
+    section = {
+        "prompt_tokens": PROMPT_PF, "page_size": PAGE_PF,
+        "kv_pages": KV_PAGES_PF, "bit_identical": True,   # asserted above
+        "warm": {
+            "ttft_p50_s": warm_ttft,
+            "tok_per_s": outs["warm", "bs"]["tok_per_s"],
+            "hit_requests": pf["hit_requests"],
+            "tokens_saved": pf["tokens_saved"],
+            "cow_copies": pf["cow_copies"],
+            "evictions": pf["evictions"],
+            "indexed_pages": pf["indexed_pages"],
+            "reclaimable_pages": pf["reclaimable_pages"],
+        },
+        "cold": {
+            "ttft_p50_s": cold_ttft,
+            "tok_per_s": outs["cold", "bs"]["tok_per_s"],
+        },
+        "eviction_trace": {
+            "kv_pages": KV_PAGES_EV, "bit_identical": True,
+            "shared_spared": mem_ev["shared_spared"],
+            "preemptions": mem_ev["preemptions"],
+            "prefix_evictions": mem_ev["prefix"]["evictions"],
+            "completed": res_ev["stats"]["n_done"],
+        },
+    }
+    return rows, section
+
+
 def _best_of(engine: Engine, base: list[Request], n: int = 2):
     """Serve the identical trace ``n`` times and keep the fastest run —
     wall-clock serving of sub-30ms steps is noisy on shared CPU, and the
@@ -289,7 +463,8 @@ def _best_of(engine: Engine, base: list[Request], n: int = 2):
     return best
 
 
-def run(smoke: bool = False, overcommit_only: bool = False):
+def run(smoke: bool = False, overcommit_only: bool = False,
+        prefix_only: bool = False):
     global json_summary
     # smoke keeps the same 8-request trace (the CI guard gates on ratios
     # that need the full concurrency of the mixed-length trace) but takes
@@ -311,6 +486,19 @@ def run(smoke: bool = False, overcommit_only: bool = False):
             "ratios": {"lazy_vs_full_inflight":
                        oc["lazy"]["peak_inflight"]
                        / max(oc["full"]["peak_inflight"], 1)},
+        }
+        return
+    if prefix_only:
+        # the focused prefix-cache gate (CI's prefix-smoke job): warm vs
+        # cold TTFT plus the shared-page eviction trace, nothing else
+        pf_rows, pf_sec = _prefix_section(model, params, cfg.vocab_size)
+        yield from pf_rows
+        json_summary = {
+            "arch": ARCH, "smoke": smoke, "prefix_only": True,
+            "prefix": pf_sec,
+            "ratios": {"prefix_hit_ttft_speedup":
+                       pf_sec["cold"]["ttft_p50_s"]
+                       / max(pf_sec["warm"]["ttft_p50_s"], 1e-9)},
         }
         return
     max_len = PROMPT + max(GENS) + 1
@@ -459,6 +647,10 @@ def run(smoke: bool = False, overcommit_only: bool = False):
     oc_rows, oc = _overcommit_section(model, params, cfg.vocab_size)
     yield from oc_rows
 
+    # -- cross-request prefix caching: warm vs cold TTFT + eviction trace
+    pf_rows, pf_sec = _prefix_section(model, params, cfg.vocab_size)
+    yield from pf_rows
+
     mem_p = res_p.get("memory", {})
     json_summary = {
         "arch": ARCH, "slots": SLOTS, "page_size": PAGE,
@@ -539,9 +731,13 @@ def run(smoke: bool = False, overcommit_only: bool = False):
             "lazy_vs_full_inflight":
                 oc["lazy"]["peak_inflight"]
                 / max(oc["full"]["peak_inflight"], 1),
+            "prefix_hit_ttft_speedup":
+                pf_sec["cold"]["ttft_p50_s"]
+                / max(pf_sec["warm"]["ttft_p50_s"], 1e-9),
         },
         "inflight_at_fixed_hbm": {"paged": paged_cap, "slot": slot_cap},
         "overcommit": oc,
+        "prefix": pf_sec,
     }
 
 
@@ -554,10 +750,12 @@ def write_json(path: str = "BENCH_serve.json") -> None:
 if __name__ == "__main__":
     smoke = "--smoke" in sys.argv
     oc_only = "--overcommit-only" in sys.argv
-    for row in run(smoke=smoke, overcommit_only=oc_only):
+    pf_only = "--prefix-only" in sys.argv
+    for row in run(smoke=smoke, overcommit_only=oc_only,
+                   prefix_only=pf_only):
         print(row)
     write_json()
     print(f"# wrote BENCH_serve.json (smoke={smoke} "
-          f"overcommit_only={oc_only})")
-    if smoke and not oc_only:
+          f"overcommit_only={oc_only} prefix_only={pf_only})")
+    if smoke and not oc_only and not pf_only:
         assert json_summary["paged"]["tok_per_s"] > 0, "smoke run produced 0 tok/s"

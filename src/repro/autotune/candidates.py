@@ -109,6 +109,17 @@ def default_candidates(kind: str = "train") -> list[Candidate]:
             Candidate("mem_lazy_wm30", RegionConfig(
                 reservation="lazy", mem_watermark=0.30), "attn",
                 serve_only=True),
+            # cross-request prefix caching (repro.serve.cache.PrefixIndex):
+            # sharing wins when traffic repeats prompt prefixes (system
+            # preambles, few-shot headers) — near-zero TTFT on hits — and
+            # only costs index/CoW overhead plus pages pinned by the index
+            # when it doesn't.  Bit-identical either way, so it's purely
+            # the decider's throughput call; allocator-policy only, never
+            # reshapes the compiled step (the step cache strips it).
+            Candidate("mem_prefix_on", RegionConfig(prefix_cache="on"),
+                      "attn", serve_only=True),
+            Candidate("mem_prefix_off", RegionConfig(prefix_cache="off"),
+                      "attn", serve_only=True),
         ]
     return cands
 

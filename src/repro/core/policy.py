@@ -121,6 +121,9 @@ class RegionConfig:
     mem_watermark: float = -1.0  # lazy-admission free-page high watermark
                                  # as a fraction of allocatable pages
                                  # (-1 = unset; engine default 0.1)
+    prefix_cache: str = ""  # cross-request KV prefix sharing ('' = unset;
+                            # 'on' = share + copy-on-write; 'off' = cold
+                            # pool per request)
 
     def to_json(self):
         return dataclasses.asdict(self)

@@ -134,6 +134,19 @@ def main(argv=None):
                     help="per-request eviction cap for the memory "
                          "governor's victim selection (the oldest "
                          "resident's progress guarantee may override it)")
+    ap.add_argument("--prefix-cache", choices=("on", "off", "auto"),
+                    default="auto",
+                    help="cross-request KV prefix sharing: fully-written "
+                         "pages of finished (or decode-started) requests "
+                         "stay indexed by hash(token run), a new prompt "
+                         "whose prefix is resident maps those pages and "
+                         "prefills only the suffix (near-zero TTFT on "
+                         "cache hits), and shared pages are copy-on-write "
+                         "privatised before any divergent write — greedy "
+                         "output stays bit-identical to a cold pool.  "
+                         "'auto' lets the serve-time PlanDecider pick the "
+                         "mem_prefix_on/mem_prefix_off candidates per "
+                         "load bucket (unset = off)")
     ap.add_argument("--spec-depth", default="auto",
                     choices=("auto", "0", "1", "2", "3", "4"),
                     help="speculative decode draft depth per pool step "
@@ -199,7 +212,7 @@ def main(argv=None):
         page_size=args.page_size, kv_pages=args.kv_pages,
         prefill_chunk=args.prefill_chunk,
         reservation=args.reservation, mem_watermark=args.mem_watermark,
-        max_preempts=args.max_preempts,
+        max_preempts=args.max_preempts, prefix_cache=args.prefix_cache,
         spec_depth=-1 if args.spec_depth == "auto" else int(args.spec_depth),
         online_retrain=args.online_retrain,
         retrain_interval=args.retrain_interval,
@@ -254,6 +267,14 @@ def main(argv=None):
                   f"{s['preempts']} times, requeue wait "
                   f"p50 {s['requeue_wait_p50_s']*1e3:.1f} ms "
                   f"max {s['requeue_wait_max_s']*1e3:.1f} ms")
+        pf = mem.get("prefix", {}) if mem else {}
+        if pf.get("enabled"):
+            print(f"[prefix] hits={pf['hit_requests']} requests / "
+                  f"{pf['tokens_saved']} prefill tokens saved  "
+                  f"indexed={pf['indexed_pages']} pages "
+                  f"({pf['reclaimable_pages']} reclaimable)  "
+                  f"cow={pf['cow_copies']} evictions={pf['evictions']} "
+                  f"victims_spared={mem.get('shared_spared', 0)}")
         sp = res.get("spec", {})
         if sp.get("max_depth", 0) > 0:      # speculation actually ran
             print(f"[spec] depth={args.spec_depth} (max used "

@@ -4,7 +4,7 @@ Two pool layouts back :meth:`repro.serve.engine.Engine.serve`:
 
 * :class:`PagedKVPool` — the default for full-KV attention families.  KV
   memory is ONE global block pool per layer: ``k_pages``/``v_pages`` of
-  shape ``(n_pages, page_size, KV, HD)``.  A request owns only the pages
+  shape ``(n_pages, page_size, KV, HD)``.  A request maps only the pages
   its sequence actually occupies, recorded in a per-slot *block table*
   (``(n_slots, max_pages_per_slot)`` int32 page ids, zero-padded).  Token
   ``t`` of a slot lives at ``(block_table[t // page_size], t % page_size)``.
@@ -20,17 +20,50 @@ Two pool layouts back :meth:`repro.serve.engine.Engine.serve`:
   one decode page and grows one page at a time (:meth:`PagedKVPool.grow`)
   as generation crosses page boundaries — overcommitting the pool and
   falling back to victim preemption (:meth:`PagedKVPool.preempt`) when the
-  free list runs dry.  Because a request holds only what its sequence
-  actually occupies, mixed-length traffic fits far more in-flight requests
-  into the same HBM than whole-cache slots (no internal fragmentation
-  beyond the final partial page).  ``page_size`` is a tunable knob (``RegionConfig
-  .page_size``): small pages waste less tail memory, large pages gather
-  with fewer, bigger DMA blocks in the paged-attention kernel.
+  free list runs dry.
 
-  The device state is pages only; block tables and per-slot lengths are
-  host-side numpy (the host is the source of truth for slot composition,
-  exactly like the engine's pending-token vector) and are shipped to the
-  fixed-shape decode step as tiny int32 arrays each step.
+  **Cross-request prefix sharing.**  Since PR 6 a page may be mapped by
+  *several* owners at once: :class:`PageAllocator` keeps a per-page
+  refcount, ``free``/``drop`` decrement it, and a page returns to the
+  free list only when the count hits zero.  Fully-written pages of a
+  finished (or decode-started) request are published to a host-side
+  :class:`PrefixIndex` — a cumulative ``hash(token run) -> page`` map —
+  and the index itself holds one reference per published page (under the
+  ``_PREFIX_OWNER`` sentinel), so prefix K/V survives the request that
+  computed it.  At admission the engine looks the new prompt up
+  (:meth:`PagedKVPool.prefix_lookup`); on a hit the resident pages are
+  mapped straight into the new slot's block table
+  (:meth:`PagedKVPool.admit_shared`) and only the un-matched suffix is
+  prefilled — a cache-hit prompt reaches its first token with near-zero
+  prefill compute.  The match is capped at ``len(history) - 1`` tokens so
+  the pending token's K/V row is always written by the new request
+  itself, keeping greedy output bit-identical to a cold pool.
+
+  **Copy-on-write.**  Shared pages are read-only by construction: before
+  any decode step writes rows ``[length, length + S)`` the engine calls
+  :meth:`PagedKVPool.cow_for_write`, which copies every still-shared page
+  in that range to a fresh page (device row copy + host block-table
+  remap, :meth:`PageAllocator.replace`) and decrements the old page's
+  refcount.  The first divergent write therefore never mutates another
+  request's (or the index's) K/V, and speculative *rollback* is still
+  pure length truncation — by the time rejected rows are discarded the
+  pages they were written to are private (``rollback`` re-checks this
+  defensively).  When the free list runs dry, index-only pages
+  (refcount 1, held just by the index) are reclaimed LRU-first
+  (:meth:`PagedKVPool.reclaim_prefix`) before admission/growth gives up;
+  the :class:`repro.serve.memory.MemoryGovernor` counts these reclaimable
+  pages as free for watermark purposes and scores preemption victims by
+  how many *shared* pages they map (evicting a page with refcount N
+  throws away N requests' worth of recompute).
+
+  The device state is pages only; block tables, per-slot lengths and the
+  prefix index are host-side (the host is the source of truth for slot
+  composition, exactly like the engine's pending-token vector) and the
+  tables are shipped to the fixed-shape decode step as tiny int32 arrays
+  each step.  ``page_size`` stays a tunable knob (``RegionConfig
+  .page_size``); ``prefix_cache`` (on/off) is a serve-only candidate
+  class so the PlanDecider can turn sharing off for loads with no prompt
+  overlap.
 
 * :class:`SlotKVPool` — the original whole-cache layout, kept for families
   whose per-request state does not grow with the sequence (ssm/hybrid
@@ -42,7 +75,9 @@ Two pool layouts back :meth:`repro.serve.engine.Engine.serve`:
 """
 from __future__ import annotations
 
-from typing import Any, Optional
+import hashlib
+from collections import Counter, OrderedDict
+from typing import Any, Iterable, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -55,13 +90,16 @@ import numpy as np
 
 
 class PageAllocator:
-    """Free-list allocator over ``n_pages`` fixed-size KV blocks.
+    """Refcounted free-list allocator over ``n_pages`` fixed-size KV blocks.
 
-    Page 0 is reserved as the null sink and never allocated.  Every live
-    page has exactly one owner; :meth:`free` releases all of an owner's
-    pages at once.  ``alloc`` is all-or-nothing so admission control can
-    reserve a request's worst case atomically; :meth:`append` grows an
-    existing owner one page at a time (the lazy-allocation growth path).
+    Page 0 is reserved as the null sink and never allocated.  A live page
+    has one or more owners: :meth:`alloc`/:meth:`append` hand out fresh
+    pages at refcount 1, :meth:`share` maps already-live pages into an
+    additional owner (prefix reuse), and :meth:`free`/:meth:`drop` only
+    *decrement* — a page returns to the free list at refcount zero.
+    ``alloc`` is all-or-nothing so admission control can reserve a
+    request's worst case atomically; :meth:`replace` swaps one owned page
+    for a fresh one in place (the copy-on-write bookkeeping step).
     """
 
     def __init__(self, n_pages: int):
@@ -71,7 +109,7 @@ class PageAllocator:
         # pop() from the end -> low page ids first
         self._free = list(range(n_pages - 1, 0, -1))
         self._owned: dict[Any, list[int]] = {}
-        self._owner_of: dict[int, Any] = {}
+        self._refcount: dict[int, int] = {}
         self.high_water = 0                     # peak live pages (frag metric)
 
     @property
@@ -80,13 +118,33 @@ class PageAllocator:
 
     @property
     def n_live(self) -> int:
-        return len(self._owner_of)
+        return len(self._refcount)
 
     def pages_of(self, owner) -> list[int]:
         return list(self._owned.get(owner, ()))
 
+    def n_held(self, owner) -> int:
+        """Pages mapped by ``owner`` — O(1), shared pages count once per
+        owner (the hot-path replacement for scanning the block table)."""
+        return len(self._owned.get(owner, ()))
+
+    def refcount(self, page: int) -> int:
+        """Owners currently mapping ``page`` (0 = free / never allocated)."""
+        return self._refcount.get(page, 0)
+
+    def _decref(self, page: int) -> bool:
+        """Drop one reference; True when the page was reclaimed."""
+        n = self._refcount[page] - 1
+        if n:
+            self._refcount[page] = n
+            return False
+        del self._refcount[page]
+        self._free.append(page)
+        return True
+
     def alloc(self, owner, n: int) -> Optional[list[int]]:
-        """Atomically claim ``n`` pages for a new ``owner`` (None if short)."""
+        """Atomically claim ``n`` fresh pages for a new ``owner`` (None if
+        short)."""
         if owner in self._owned:
             raise ValueError(f"owner {owner!r} already holds pages")
         if n < 0:
@@ -96,31 +154,75 @@ class PageAllocator:
         pages = [self._free.pop() for _ in range(n)]
         self._owned[owner] = pages
         for p in pages:
-            self._owner_of[p] = owner
+            self._refcount[p] = 1
         self.high_water = max(self.high_water, self.n_live)
-        return pages
+        return list(pages)      # a copy: replace() edits the owned list
 
     def append(self, owner) -> Optional[int]:
-        """Grow an existing owner by one page (None when exhausted)."""
+        """Grow an existing owner by one fresh page (None when exhausted)."""
         if owner not in self._owned:
             raise ValueError(f"owner {owner!r} holds no pages (alloc first)")
         if not self._free:
             return None
         p = self._free.pop()
         self._owned[owner].append(p)
-        self._owner_of[p] = owner
+        self._refcount[p] = 1
         self.high_water = max(self.high_water, self.n_live)
         return p
 
+    def share(self, owner, pages: Sequence[int]) -> None:
+        """Map already-live ``pages`` into ``owner`` as well, bumping each
+        refcount (the prefix-reuse entry point).  Creates ``owner`` if it
+        holds nothing yet; raises if a page is not live or is already
+        mapped by this owner."""
+        held = self._owned.get(owner, [])
+        for p in pages:                         # validate before mutating
+            if p not in self._refcount:
+                raise ValueError(f"page {p} is not live (cannot share)")
+            if p in held:
+                raise ValueError(f"owner {owner!r} already maps page {p}")
+        if len(set(pages)) != len(pages):
+            raise ValueError("duplicate pages in share request")
+        if owner not in self._owned:
+            self._owned[owner] = []
+        for p in pages:
+            self._owned[owner].append(p)
+            self._refcount[p] += 1
+
     def free(self, owner) -> list[int]:
-        """Release every page held by ``owner`` back to the free list."""
+        """Unmap every page held by ``owner``; returns the pages actually
+        *reclaimed* (refcount hit zero — with sharing this can be fewer
+        than the pages the owner mapped)."""
         if owner not in self._owned:
             raise ValueError(f"owner {owner!r} holds no pages (double free?)")
         pages = self._owned.pop(owner)
-        for p in pages:
-            del self._owner_of[p]
-        self._free.extend(reversed(pages))
-        return pages
+        return [p for p in reversed(pages) if self._decref(p)][::-1]
+
+    def drop(self, owner, page: int) -> bool:
+        """Unmap one ``page`` from ``owner`` (True when reclaimed)."""
+        held = self._owned.get(owner)
+        if held is None or page not in held:
+            raise ValueError(f"owner {owner!r} does not map page {page}")
+        held.remove(page)
+        return self._decref(page)
+
+    def replace(self, owner, old: int) -> Optional[int]:
+        """Swap ``old`` for a fresh page *in place* in ``owner``'s mapping
+        (copy-on-write bookkeeping: the caller copies device contents and
+        remaps its block table).  The fresh page starts at refcount 1 and
+        ``old`` loses this owner's reference.  None when the free list is
+        dry — the caller must reclaim or stall."""
+        held = self._owned.get(owner)
+        if held is None or old not in held:
+            raise ValueError(f"owner {owner!r} does not map page {old}")
+        if not self._free:
+            return None
+        new = self._free.pop()
+        held[held.index(old)] = new
+        self._refcount[new] = 1
+        self.high_water = max(self.high_water, self.n_live)
+        self._decref(old)
+        return new
 
     def free_run_histogram(self) -> dict[int, int]:
         """Histogram of contiguous free-page-id runs: ``{run_len: count}``.
@@ -145,15 +247,117 @@ class PageAllocator:
         return hist
 
     def check_invariants(self) -> None:
-        """Free + live partition pages 1..n-1; ownership maps agree."""
+        """Free + live partition pages 1..n-1; per-owner mappings are
+        duplicate-free; refcounts equal the number of owners mapping each
+        page (so no reclaim while refcount > 0 and no leak at zero)."""
         free = set(self._free)
-        live = set(self._owner_of)
+        live = set(self._refcount)
         assert not (free & live), f"pages both free and live: {free & live}"
         assert free | live == set(range(1, self.n_pages)), "page leak"
         assert 0 not in free and 0 not in live, "null page escaped"
-        flat = [p for pages in self._owned.values() for p in pages]
-        assert len(flat) == len(set(flat)), "page owned twice"
-        assert set(flat) == live, "ownership maps disagree"
+        assert len(free) == len(self._free), "free list duplicates"
+        counts: Counter = Counter()
+        for owner, pages in self._owned.items():
+            assert len(pages) == len(set(pages)), \
+                f"owner {owner!r} maps a page twice"
+            counts.update(pages)
+        assert dict(counts) == self._refcount, \
+            "refcounts disagree with ownership maps"
+        assert all(c >= 1 for c in self._refcount.values()), \
+            "live page with refcount < 1"
+
+
+# ---------------------------------------------------------------------------
+# Prefix index (host-side hash(token run) -> resident page)
+# ---------------------------------------------------------------------------
+
+
+def _page_keys(tokens: np.ndarray, page_size: int, n_full: int) -> list[bytes]:
+    """Cumulative content keys for the first ``n_full`` full pages of a
+    token run.  Key ``i`` hashes tokens ``[0, (i+1) * page_size)`` — the
+    whole *prefix*, not just the page's own chunk — so two different
+    histories that happen to share one middle page never collide, and a
+    lookup can walk key-by-key without materialising the run."""
+    h = hashlib.sha1()
+    keys = []
+    for i in range(n_full):
+        h.update(tokens[i * page_size:(i + 1) * page_size]
+                 .astype("<i4").tobytes())
+        keys.append(h.digest())
+    return keys
+
+
+class PrefixIndex:
+    """LRU map from cumulative token-prefix hashes to resident page ids.
+
+    One entry per *fully-written* page: ``key = sha1(tokens[:(i+1)*ps])``
+    maps to the physical page holding rows ``[i*ps, (i+1)*ps)`` of some
+    past request.  Lookup walks a new prompt's keys in order and stops at
+    the first miss, so a hit is always a contiguous leading run of pages.
+    The index stores host ints only — page *references* are held by the
+    pool on the index's behalf (``_PREFIX_OWNER`` in the allocator), and
+    eviction (:meth:`drop_page`) is driven by the pool's
+    ``reclaim_prefix`` walking :meth:`lru_pages` oldest-first.  Dropping a
+    mid-chain page orphans the chain's tail (unreachable by lookup); the
+    orphans are index-only (refcount 1) and get reclaimed by the very
+    next walks, so they cannot pin memory."""
+
+    def __init__(self):
+        self._entries: OrderedDict[bytes, int] = OrderedDict()  # key -> page
+        self._key_of: dict[int, bytes] = {}                     # page -> key
+        self.lookups = 0
+        self.hits = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def lookup(self, tokens: np.ndarray, page_size: int) -> list[int]:
+        """Longest resident leading page run for ``tokens`` (LRU-touched)."""
+        self.lookups += 1
+        toks = np.asarray(tokens, np.int32).reshape(-1)
+        pages: list[int] = []
+        for key in _page_keys(toks, page_size, toks.size // page_size):
+            page = self._entries.get(key)
+            if page is None:
+                break
+            self._entries.move_to_end(key)
+            pages.append(page)
+        if pages:
+            self.hits += 1
+        return pages
+
+    def register(self, tokens: np.ndarray, pages: Sequence[int],
+                 page_size: int, n_full: int) -> list[int]:
+        """Publish the first ``n_full`` fully-written pages of ``tokens``.
+        Keys already present keep their existing page (first writer wins —
+        identical content, and the older page may already be shared);
+        returns the pages *newly* held by the index so the caller can take
+        the index's reference on exactly those."""
+        toks = np.asarray(tokens, np.int32).reshape(-1)
+        new: list[int] = []
+        for i, key in enumerate(_page_keys(toks, page_size, n_full)):
+            if key in self._entries:
+                self._entries.move_to_end(key)
+                continue
+            page = int(pages[i])
+            if page in self._key_of:        # already published under another
+                continue                    # (orphaned) chain — keep that ref
+            self._entries[key] = page
+            self._key_of[page] = key
+            new.append(page)
+        return new
+
+    def drop_page(self, page: int) -> None:
+        key = self._key_of.pop(page, None)
+        if key is not None:
+            del self._entries[key]
+
+    def lru_pages(self) -> list[int]:
+        """Resident pages, least-recently-used first (eviction order)."""
+        return list(self._entries.values())
+
+    def pages(self) -> Iterable[int]:
+        return self._key_of.keys()
 
 
 # ---------------------------------------------------------------------------
@@ -165,12 +369,23 @@ def pages_for(n_tokens: int, page_size: int) -> int:
     return -(-max(n_tokens, 0) // page_size)
 
 
+#: Allocator owner under which the :class:`PrefixIndex` holds its page
+#: references (slots are ints, so the string can never collide).
+_PREFIX_OWNER = "prefix-cache"
+
+
+def _cow_copy(pages: Any, src: jax.Array, dst: jax.Array) -> Any:
+    return jax.tree.map(lambda a: a.at[dst].set(a[src]), pages)
+
+
 class PagedKVPool:
     """Global KV block pool + per-slot block tables (see module docstring).
 
     ``pages`` is the device pytree of per-layer page arrays (built by the
     model's ``paged_cache_spec``); ``block_tables``/``lengths`` are host
     numpy, updated by :meth:`admit`/:meth:`advance`/:meth:`release`.
+    Prefix sharing is off until the engine sets ``prefix_enabled`` (the
+    ``--prefix-cache`` knob / ``mem_prefix_*`` candidates).
     """
 
     def __init__(self, pages_avals: Any, n_slots: int, page_size: int,
@@ -191,6 +406,14 @@ class PagedKVPool:
         self._free_slots = list(range(n_slots - 1, -1, -1))
         self._active: set[int] = set()
         self.n_preempts = 0                 # victims evicted mid-flight
+        # -- prefix sharing ----------------------------------------------------
+        self.prefix_enabled = False
+        self.prefix = PrefixIndex()
+        self.prefix_hit_requests = 0        # admissions that mapped shared pages
+        self.prefix_tokens_saved = 0        # prompt tokens skipped by sharing
+        self.cow_copies = 0                 # shared pages privatised pre-write
+        self.prefix_evictions = 0           # index-only pages reclaimed
+        self._cow_fn = None                 # lazily-jitted device page copy
 
     # -- slot accounting -----------------------------------------------------
     @property
@@ -204,23 +427,43 @@ class PagedKVPool:
     def can_admit(self, n_tokens: int) -> bool:
         n = pages_for(n_tokens, self.page_size)
         return (bool(self._free_slots) and n <= self.max_pages_per_slot
-                and n <= self.allocator.n_free)
+                and n <= self.allocator.n_free + self.n_reclaimable)
 
     def admit(self, n_tokens: int) -> Optional[int]:
         """Reserve a slot plus the request's worst-case pages (atomic)."""
         return self.admit_pages(pages_for(n_tokens, self.page_size))
 
     def admit_pages(self, n_pages: int) -> Optional[int]:
-        """Admit a request holding exactly ``n_pages`` pages — the lazy
-        entry point (:class:`repro.serve.memory.MemoryGovernor`): a request
-        starts with only its prompt's pages plus one decode page and later
-        grows one page at a time via :meth:`grow`.  Atomic like
+        """Admit a request holding exactly ``n_pages`` fresh pages — the
+        lazy entry point (:class:`repro.serve.memory.MemoryGovernor`): a
+        request starts with only its prompt's pages plus one decode page
+        and later grows one page at a time via :meth:`grow`.  Atomic like
         :meth:`admit`; None when no slot or not enough free pages."""
-        if (not self._free_slots or n_pages > self.max_pages_per_slot
-                or n_pages > self.allocator.n_free):
+        return self.admit_shared(n_pages)
+
+    def admit_shared(self, n_fresh: int,
+                     shared_pages: Sequence[int] = ()) -> Optional[int]:
+        """Admit a request mapping ``shared_pages`` (a prefix-cache hit,
+        refcounts bumped — becoming rows ``[0, len(shared) * page_size)``
+        of its block table) plus ``n_fresh`` fresh pages.  Index-only
+        pages are reclaimed LRU-first if the free list is short, but the
+        hit's own pages are never sacrificed to admit it.  Atomic; None
+        when no slot or still not enough pages."""
+        if n_fresh < 0:
+            raise ValueError("n_fresh must be >= 0")
+        shared = [int(p) for p in shared_pages]
+        if (not self._free_slots
+                or n_fresh + len(shared) > self.max_pages_per_slot):
             return None
+        if n_fresh > self.allocator.n_free:
+            self.reclaim_prefix(n_fresh - self.allocator.n_free, keep=shared)
+            if n_fresh > self.allocator.n_free:
+                return None
         slot = self._free_slots.pop()
-        pages = self.allocator.alloc(slot, n_pages)
+        self.allocator.share(slot, shared)
+        for _ in range(n_fresh):
+            self.allocator.append(slot)
+        pages = self.allocator.pages_of(slot)
         self._active.add(slot)
         self.block_tables[slot] = 0
         self.block_tables[slot, :len(pages)] = pages
@@ -228,46 +471,53 @@ class PagedKVPool:
         return slot
 
     def grow(self, slot: int) -> bool:
-        """Extend ``slot`` by one page (lazy growth at a page boundary).
-        False when the allocator is dry or the block table is full — the
-        governor then reclaims a victim or stalls the slot."""
+        """Extend ``slot`` by one page (lazy growth at a page boundary),
+        reclaiming an index-only prefix page if the free list is dry.
+        False when nothing is reclaimable either or the block table is
+        full — the governor then evicts a victim or stalls the slot."""
         if slot not in self._active:
             raise ValueError(f"slot {slot} is not active")
-        held = len(self.allocator.pages_of(slot))
+        held = self.allocator.n_held(slot)
         if held >= self.max_pages_per_slot:
             return False
+        if self.allocator.n_free == 0:
+            self.reclaim_prefix(1)
         p = self.allocator.append(slot)
         if p is None:
             return False
         self.block_tables[slot, held] = p
         return True
 
-    def release(self, slot: int) -> None:
-        """Free a slot's pages; its block-table row reverts to the null page."""
+    def release(self, slot: int) -> list[int]:
+        """Unmap a slot's pages (reclaimed only where this was the last
+        reference); its block-table row reverts to the null page.  Returns
+        the reclaimed pages."""
         if slot not in self._active:
             raise ValueError(f"slot {slot} is not active (double free?)")
-        self.allocator.free(slot)
+        reclaimed = self.allocator.free(slot)
         self._active.remove(slot)
         self._free_slots.append(slot)
         self.block_tables[slot] = 0
         self.lengths[slot] = 0
+        return reclaimed
 
     def preempt(self, slot: int) -> int:
         """Evict a victim mid-flight: identical page bookkeeping to
         :meth:`release` (the request's K/V is *discarded*, not swapped —
         it re-enters as recompute-prefill over prompt + generated-so-far),
         but counted separately so the governor's report distinguishes
-        completions from evictions.  Returns the number of pages freed."""
-        n = len(self.allocator.pages_of(slot))
-        self.release(slot)
+        completions from evictions.  Pages the victim *shared* with a
+        survivor or the prefix index stay live (only the victim's
+        reference drops).  Returns the number of pages reclaimed."""
+        reclaimed = self.release(slot)
         self.n_preempts += 1
-        return n
+        return len(reclaimed)
 
     def advance(self, slot: int, n_tokens: int) -> None:
-        """Record ``n_tokens`` newly written tokens for ``slot`` (multi-token
-        append: the speculative verify step writes a whole drafted block at
-        once — K/V rows land at offsets ``lengths .. lengths+n-1`` inside
-        the pages the slot already reserved, so no allocator traffic)."""
+        """Record ``n_tokens`` newly covered tokens for ``slot`` — rows
+        written by prefill/verify steps at offsets ``lengths ..
+        lengths+n-1``, or rows *adopted* from shared prefix pages at
+        admission (no write happened; the K/V is already resident)."""
         if slot not in self._active:
             raise ValueError(f"slot {slot} is not active")
         new_len = int(self.lengths[slot]) + n_tokens
@@ -277,14 +527,18 @@ class PagedKVPool:
         self.lengths[slot] = new_len
 
     def reserved_tokens(self, slot: int) -> int:
-        """Token capacity of the pages ``slot`` actually holds — the reach
+        """Token capacity of the pages ``slot`` actually maps — the reach
         of its block table.  Writes beyond it land in the null page, so
         speculative acceptance must stop here (not at the pool-wide
         ``max_pages_per_slot`` bound, which a lazily-allocated slot need
-        not have reserved)."""
+        not have reserved).  O(1) from the allocator's held-page count —
+        a block-table ``count_nonzero`` scan would both cost
+        O(max_pages_per_slot) in the per-slot per-step hot path and
+        (now that pages can be shared) give the same answer only by
+        accident of the mapping being positional."""
         if slot not in self._active:
             raise ValueError(f"slot {slot} is not active")
-        return int(np.count_nonzero(self.block_tables[slot])) * self.page_size
+        return self.allocator.n_held(slot) * self.page_size
 
     def rollback(self, slot: int, n_tokens: int) -> None:
         """Truncate ``slot`` by ``n_tokens`` — the rejected tail of a
@@ -292,13 +546,148 @@ class PagedKVPool:
         slot keeps every reserved page (so high-water accounting is
         untouched) and the stale K/V rows beyond the new length are masked
         by attention and overwritten by the next step's writes before any
-        mask admits them."""
+        mask admits them.  Pages in the rolled-back range must be private:
+        the engine privatises them (:meth:`cow_for_write`) before the
+        verify step writes, so finding a shared one here means rows were
+        written into another owner's K/V — re-privatised defensively, or
+        an error if no page is left to copy into."""
         if slot not in self._active:
             raise ValueError(f"slot {slot} is not active")
-        if n_tokens < 0 or n_tokens > int(self.lengths[slot]):
+        length = int(self.lengths[slot])
+        if n_tokens < 0 or n_tokens > length:
             raise ValueError(f"slot {slot}: cannot roll back {n_tokens} of "
-                             f"{int(self.lengths[slot])} tokens")
-        self.lengths[slot] -= n_tokens
+                             f"{length} tokens")
+        if n_tokens:
+            for idx in range((length - n_tokens) // self.page_size,
+                             (length - 1) // self.page_size + 1):
+                page = int(self.block_tables[slot, idx])
+                if page and self.allocator.refcount(page) > 1:
+                    if not self._cow(slot, idx):
+                        raise RuntimeError(
+                            f"slot {slot}: rollback over shared page {page} "
+                            f"with no free page to privatise into")
+        self.lengths[slot] = length - n_tokens
+
+    # -- prefix sharing ------------------------------------------------------
+    def prefix_lookup(self, tokens: np.ndarray) -> tuple[list[int], int]:
+        """Longest cached leading page run for a token history: returns
+        ``(pages, matched_tokens)``.  ``matched`` is capped at
+        ``len(tokens) - 1`` so the engine always prefills (at least) the
+        pending last token itself — its K/V row is never adopted, which
+        keeps cache-hit output bit-identical to a cold pool.  ``([], 0)``
+        when sharing is disabled or nothing matches."""
+        if not self.prefix_enabled:
+            return [], 0
+        toks = np.asarray(tokens, np.int32).reshape(-1)
+        pages = self.prefix.lookup(toks, self.page_size)
+        if not pages:
+            return [], 0
+        matched = min(len(pages) * self.page_size, toks.size - 1)
+        if matched <= 0:
+            return [], 0
+        return pages[:pages_for(matched, self.page_size)], matched
+
+    def register_prefix(self, slot: int, tokens: np.ndarray) -> int:
+        """Publish ``slot``'s fully-written pages under ``tokens`` (its
+        committed history) to the prefix index, which takes one reference
+        per newly published page so the K/V outlives the request.  The
+        last history token is pending (row not written) and a partial tail
+        page is never published.  Returns pages newly indexed."""
+        if slot not in self._active:
+            raise ValueError(f"slot {slot} is not active")
+        if not self.prefix_enabled:
+            return 0
+        toks = np.asarray(tokens, np.int32).reshape(-1)
+        n_full = min(int(self.lengths[slot]), toks.size - 1) // self.page_size
+        if n_full <= 0:
+            return 0
+        new = self.prefix.register(
+            toks, [int(p) for p in self.block_tables[slot, :n_full]],
+            self.page_size, n_full)
+        if new:
+            self.allocator.share(_PREFIX_OWNER, new)
+        return len(new)
+
+    @property
+    def n_reclaimable(self) -> int:
+        """Index-only pages (refcount 1): reclaimable on demand, so the
+        governor's watermark treats them as free."""
+        alloc = self.allocator
+        return sum(1 for p in self.prefix.pages() if alloc.refcount(p) == 1)
+
+    def reclaim_prefix(self, n: int, keep: Sequence[int] = ()) -> int:
+        """Evict up to ``n`` index-only prefix pages, least recently used
+        first.  Pages in ``keep`` (e.g. the very hit being admitted) and
+        pages still mapped by a resident slot are skipped.  Returns the
+        number of pages actually reclaimed."""
+        if n <= 0 or not len(self.prefix):
+            return 0
+        keep_set = set(int(p) for p in keep)
+        dropped = 0
+        for page in self.prefix.lru_pages():
+            if dropped >= n:
+                break
+            if page in keep_set or self.allocator.refcount(page) != 1:
+                continue
+            self.prefix.drop_page(page)
+            self.allocator.drop(_PREFIX_OWNER, page)
+            self.prefix_evictions += 1
+            dropped += 1
+        return dropped
+
+    def cow_for_write(self, slot: int, n_tokens: int) -> bool:
+        """Privatise every shared page the next ``n_tokens`` rows of
+        ``slot`` would write into (rows ``[length, length + n)``, clipped
+        to the reserved reach).  Device contents are copied row-for-row to
+        a fresh page and the block table remapped, so the write can
+        proceed without mutating a co-owner's K/V.  False when a copy
+        target cannot be found even after reclaiming index-only pages —
+        the engine then treats the slot like a failed growth (victim or
+        stall)."""
+        if slot not in self._active:
+            raise ValueError(f"slot {slot} is not active")
+        length = int(self.lengths[slot])
+        hi = min(length + n_tokens, self.reserved_tokens(slot))
+        if hi <= length:
+            return True
+        for idx in range(length // self.page_size,
+                         (hi - 1) // self.page_size + 1):
+            page = int(self.block_tables[slot, idx])
+            if page and self.allocator.refcount(page) > 1:
+                if not self._cow(slot, idx):
+                    return False
+        return True
+
+    def _cow(self, slot: int, idx: int) -> bool:
+        """Copy block-table entry ``idx`` of ``slot`` to a private page."""
+        old = int(self.block_tables[slot, idx])
+        if self.allocator.n_free == 0:
+            self.reclaim_prefix(1)
+        new = self.allocator.replace(slot, old)
+        if new is None:
+            return False
+        if self._cow_fn is None:
+            self._cow_fn = jax.jit(_cow_copy, donate_argnums=(0,))
+        self.pages = self._cow_fn(self.pages, jnp.asarray(old, jnp.int32),
+                                  jnp.asarray(new, jnp.int32))
+        self.block_tables[slot, idx] = new
+        self.cow_copies += 1
+        return True
+
+    def prefix_stats(self) -> dict:
+        """Machine-readable sharing counters (the governor's summary and
+        BENCH_serve.json report them next to the memory taps)."""
+        return {
+            "enabled": self.prefix_enabled,
+            "indexed_pages": len(self.prefix),
+            "reclaimable_pages": self.n_reclaimable,
+            "lookups": self.prefix.lookups,
+            "hit_lookups": self.prefix.hits,
+            "hit_requests": self.prefix_hit_requests,
+            "tokens_saved": self.prefix_tokens_saved,
+            "cow_copies": self.cow_copies,
+            "evictions": self.prefix_evictions,
+        }
 
     # -- memory accounting ---------------------------------------------------
     def page_bytes(self) -> int:

@@ -149,6 +149,11 @@ class ServeConfig:
     max_preempts: int = 4       # per-request eviction cap; the oldest
                                 # resident's mandatory headroom may still
                                 # override it (progress guarantee)
+    prefix_cache: str = "auto"  # cross-request KV prefix sharing: "on" /
+                                # "off" pin it; "auto" = the plan's
+                                # attn-region prefix_cache knob (the
+                                # PlanDecider's mem_prefix_* channel;
+                                # unset = off)
     prefill_chunk: int = 0      # chunked prefill piece size (0 = whole
                                 # prompt in one chunk)
     prefill_chunks_per_step: int = 1   # prefill chunks interleaved between
@@ -418,6 +423,17 @@ class Engine:
         wm = plan.config_for("layer0/attn").mem_watermark
         return wm if wm >= 0 else 0.1
 
+    def prefix_cache_for(self, plan: RegionPlan) -> bool:
+        """Prefix-sharing resolution (same precedence as the other memory
+        knobs): an explicit ServeConfig value pins it; in auto mode the
+        plan's attn-region knob (the PlanDecider's mem_prefix_on /
+        mem_prefix_off channel) decides; unset means off.  Sharing is
+        bit-identical either way — this knob trades index/CoW overhead
+        against prefill savings per load bucket."""
+        if self.cfg.prefix_cache in ("on", "off"):
+            return self.cfg.prefix_cache == "on"
+        return plan.config_for("layer0/attn").prefix_cache == "on"
+
     def _use_paged(self) -> bool:
         if self.cfg.paged == "off":
             return False
@@ -452,6 +468,7 @@ class Engine:
                 reservation=self.reservation_for(self.plan),
                 watermark=self.mem_watermark_for(self.plan),
                 max_preempts=self.cfg.max_preempts))
+            self._pool.prefix_enabled = self.prefix_cache_for(self.plan)
             self._build_step = self._build_paged_step
         else:
             self._pool = SlotKVPool(self._slot_cache_avals(),
@@ -631,7 +648,9 @@ class Engine:
         # a recompile (the step cache strips the knobs)
         if self.governor is not None:
             self.governor.set_policy(self.reservation_for(plan),
-                                     self.mem_watermark_for(plan))
+                                     self.mem_watermark_for(plan),
+                                     max_preempts=self.cfg.max_preempts)
+            self._pool.prefix_enabled = self.prefix_cache_for(plan)
         key = self._step_cache_key(plan)
         if key not in self._pool_steps:
             self._pool_steps[key] = self._build_step(plan)
@@ -731,6 +750,7 @@ class Engine:
             # the host, never the compiled step
             rc.pop("reservation", None)
             rc.pop("mem_watermark", None)
+            rc.pop("prefix_cache", None)
             if not self._spec_knob_live():
                 rc.pop("spec_depth", None)
         return _json.dumps(raw, sort_keys=True)
@@ -820,7 +840,7 @@ class Engine:
             if done:
                 sched.complete(req, t)
                 active[slot] = False
-                on_complete(slot)
+                on_complete(slot, req)
             else:
                 pending[slot] = int(out_np[slot, c - 1])
         return consumed
@@ -866,7 +886,8 @@ class Engine:
             steps += 1
             consumed = self._commit_tokens(sched, np.asarray(toks),
                                            np.ones((pool.n_slots,), np.int32),
-                                           pending, active, now(), pool.free)
+                                           pending, active, now(),
+                                           lambda slot, _req: pool.free(slot))
             self._tap_step(n_act, sum(consumed.values()),
                            time.perf_counter() - t_step0)
         return {"steps": steps}
@@ -889,6 +910,17 @@ class Engine:
         (progress guarantee: the head of the line always finishes); a slot
         that can neither grow nor reclaim *stalls* — masked out of this
         step, retried next step.
+
+        **Prefix caching** (``--prefix-cache``): admission looks the
+        prompt up in the pool's :class:`repro.serve.cache.PrefixIndex`;
+        a hit maps the cached leading page run into the new slot's block
+        table (refcounts bumped) and prefill covers only the un-matched
+        suffix — near-zero TTFT on repeated prompts, greedy output
+        bit-identical to a cold pool because the pending token's row is
+        always written fresh and shared pages are copy-on-write
+        privatised (``cow_for_write``) before any decode write touches
+        them.  Requests publish their fully-written pages on entering
+        decode and again at completion.
 
         Between consecutive decode steps at most
         ``prefill_chunks_per_step`` prompt chunks run, so a long prompt is
@@ -927,7 +959,13 @@ class Engine:
         # step — cache the device array instead of re-uploading it per step
         bt_dev = {"arr": None, "dirty": True}
 
-        def release_slot(slot):
+        def release_slot(slot, req=None):
+            # publish the finished request's fully-written pages to the
+            # prefix index before unmapping — the index takes its own
+            # reference, so the K/V outlives the request and a later
+            # prompt sharing the prefix admits with near-zero prefill
+            if req is not None:
+                pool.register_prefix(slot, req.token_history())
             pool.release(slot)
             bt_dev["dirty"] = True
 
@@ -951,14 +989,26 @@ class Engine:
                 # (every recomputed token replaces a remaining new one)
                 hist = req.token_history()
                 total = req.prompt.size - 1 + req.max_new_tokens
-                slot = gov.admit(hist.size, total)
+                # prefix-cache lookup: the longest cached leading page run
+                # of the history (capped at hist.size - 1, so the pending
+                # token's K/V row is always this request's own write) is
+                # mapped shared and skipped by prefill — this includes a
+                # preempted request re-hitting pages it published itself
+                shared, matched = pool.prefix_lookup(hist)
+                slot = gov.admit(hist.size, total, shared_pages=shared)
                 if slot is None:            # head-of-line waits for memory
                     return
                 sched.pop_ready(t)
                 sched.bind_prefill(req, slot, now())
-                req.prefill_pos = 0
-                if hist.size < 2:           # no prefix to prefill
+                if matched:
+                    pool.advance(slot, matched)  # rows adopted, not written
+                    pool.prefix_hit_requests += 1
+                    pool.prefix_tokens_saved += matched
+                    req.prefix_hit_tokens += matched
+                req.prefill_pos = matched
+                if hist.size - 1 <= matched:     # nothing left to prefill
                     pending[slot] = int(hist[-1])
+                    pool.register_prefix(slot, hist)
                     sched.start_decode(req)
                     active[slot] = True
                     bt_dev["dirty"] = True
@@ -995,6 +1045,9 @@ class Engine:
                 budget -= 1
                 if req.prefill_pos >= feed.size:
                     pending[slot] = int(req.token_history()[-1])
+                    # the prompt's full pages are now written: publish them
+                    # so concurrent same-prefix arrivals hit immediately
+                    pool.register_prefix(slot, req.token_history())
                     sched.start_decode(req)
                     active[slot] = True
                     bt_dev["dirty"] = True
@@ -1026,6 +1079,7 @@ class Engine:
             # reclaimable.
             stalled: list[int] = []
             grown0 = gov.grown_pages
+            cow0 = pool.cow_copies
             order = sorted(sched.active, key=lambda s: (
                 sched.active[s].t_admit or 0.0, sched.active[s].rid))
             for i, slot in enumerate(order):
@@ -1033,8 +1087,13 @@ class Engine:
                     continue                # taken as an earlier victim
                 req = sched.active[slot]
                 cap = req.prompt.size - 1 + req.max_new_tokens
+                # besides headroom, this step's K/V writes must land in
+                # *private* pages: cow_for_write copies any still-shared
+                # page in the write range first (copy-on-write), and a
+                # failed copy is handled exactly like a failed growth
                 while (slot in sched.active
-                       and gov.ensure_headroom(slot, S, cap) < 1):
+                       and (gov.ensure_headroom(slot, S, cap) < 1
+                            or not pool.cow_for_write(slot, S))):
                     # only strictly-younger residents are evictable (LIFO:
                     # a slot never discards its own K/V — stalling keeps
                     # it — and never inverts the order by evicting an
@@ -1048,9 +1107,10 @@ class Engine:
                         break
                     preempt_victim(victim)
             stalled = [s for s in stalled if s in sched.active]
-            if gov.grown_pages != grown0:
-                # growth extends block-table rows in place — the cached
-                # device copy is stale even though pool composition is not
+            if gov.grown_pages != grown0 or pool.cow_copies != cow0:
+                # growth and CoW edit block-table rows in place — the
+                # cached device copy is stale even though pool composition
+                # is not
                 bt_dev["dirty"] = True
             if sched.active and len(stalled) == len(sched.active):
                 # every decode is out of pages and nothing is reclaimable:

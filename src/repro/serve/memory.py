@@ -31,15 +31,28 @@ The :class:`MemoryGovernor` extends the loop to allocation policy itself:
   grow nor find a victim *stalls* — it is masked out of the decode step
   (its write would land in the null page) and retried next step.
 
-* **Autotuned policy** — ``reservation`` (``mem_full`` / ``mem_lazy``)
-  and the watermark fraction are serve-only candidate classes
-  (:mod:`repro.autotune.candidates`), so the serve-time
-  :class:`repro.autotune.decider.PlanDecider` — or the epsilon-greedy
-  explorer — picks memory policy per load bucket from occupancy-scaled
-  counters, exactly the ppOpen-AT "change runtime execution parameters
-  from measurements" loop applied to the allocator.  The engine calls
-  :meth:`set_policy` on every replan; policy switches affect only future
-  admissions/growth, never already-resident state.
+* **Prefix-aware accounting** — with cross-request prefix sharing
+  (:class:`repro.serve.cache.PrefixIndex`) the governor's arithmetic
+  learns two things.  Admission asks the pool for the prompt's cached
+  leading run first and reserves only the *un-shared* remainder; the
+  watermark compares demand against ``free + reclaimable`` (index-only
+  pages are droppable on demand, so counting them as occupied would
+  starve admission to protect droppable cache).  And victim selection
+  scores each resident by how many *shared* pages it maps: evicting a
+  page with refcount N throws away N requests' worth of recompute, so
+  among cap-eligible residents the governor prefers the one sharing the
+  fewest pages, falling back to LIFO admission order to break ties
+  (``shared_spared`` counts how often this overrode the pure-LIFO pick).
+
+* **Autotuned policy** — ``reservation`` (``mem_full`` / ``mem_lazy``),
+  the watermark fraction and prefix sharing (``mem_prefix_*``) are
+  serve-only candidate classes (:mod:`repro.autotune.candidates`), so
+  the serve-time :class:`repro.autotune.decider.PlanDecider` — or the
+  epsilon-greedy explorer — picks memory policy per load bucket from
+  occupancy-scaled counters, exactly the ppOpen-AT "change runtime
+  execution parameters from measurements" loop applied to the allocator.
+  The engine calls :meth:`set_policy` on every replan; policy switches
+  affect only future admissions/growth, never already-resident state.
 
 The governor owns *policy and accounting*; page bookkeeping stays in
 :class:`repro.serve.cache.PagedKVPool` and lifecycle in
@@ -76,41 +89,67 @@ class MemoryGovernor:
         self.admit_blocked = 0      # admissions deferred by the watermark
         self.grown_pages = 0        # pages added by lazy growth
         self.peak_resident = 0      # max concurrent resident requests
-        self.free_page_trace: list[int] = []    # free pages per decode step
+        self.shared_spared = 0      # victim picks diverted off a sharer
+        # free pages per decode step, decimated in place: the stride
+        # doubles whenever the buffer fills, so a serve of any length
+        # holds <= _TRACE_CAP samples (satellite fix: the old trace
+        # appended every step and only strided at summary() time —
+        # unbounded host memory on a long-lived serve)
+        self.free_page_trace: list[int] = []
+        self.free_pages_min: Optional[int] = None   # exact, not sampled
+        self._trace_stride = 1
+        self._trace_skip = 0
+
+    _TRACE_CAP = 128                # decimate when the trace hits this
 
     # -- policy ---------------------------------------------------------------
     def set_policy(self, reservation: Optional[str] = None,
-                   watermark: Optional[float] = None) -> None:
+                   watermark: Optional[float] = None,
+                   max_preempts: Optional[int] = None) -> None:
         """Install the (re)decided memory policy.  Only future admissions
         and growth see it; resident reservations are never shrunk."""
-        if reservation in ("full", "lazy"):
+        if reservation is not None:
+            if reservation not in ("full", "lazy"):
+                raise ValueError(f"unknown reservation {reservation!r} "
+                                 "(expected 'full' or 'lazy')")
             self.policy.reservation = reservation
         if watermark is not None and watermark >= 0:
             self.policy.watermark = float(watermark)
+        if max_preempts is not None:
+            if max_preempts < 0:
+                raise ValueError("max_preempts must be >= 0")
+            self.policy.max_preempts = int(max_preempts)
 
     # -- admission ------------------------------------------------------------
-    def admit(self, prompt_tokens: int, total_tokens: int) -> Optional[int]:
+    def admit(self, prompt_tokens: int, total_tokens: int,
+              shared_pages: Sequence[int] = ()) -> Optional[int]:
         """Admit one request; returns its slot or None (head-of-line waits).
 
         ``prompt_tokens`` is the length of the token history the slot must
         hold before its first decode step (prompt + any recomputed
         generation for a preempted request); ``total_tokens`` is the
-        request's worst case.  Full mode reserves ``total_tokens`` of
-        pages atomically; lazy mode takes the prompt's pages plus one
-        decode page — never more than the worst case — and only while the
-        free list stays above the watermark."""
+        request's worst case.  ``shared_pages`` is the prompt's cached
+        leading page run (a prefix-index hit): both modes map it and
+        reserve only the *fresh* remainder.  Full mode reserves the whole
+        remainder atomically; lazy mode takes the un-shared prompt pages
+        plus one decode page — never more than the worst case — and only
+        while free-equivalent pages (free list + reclaimable index-only
+        pages) stay above the watermark."""
         pool = self.pool
+        n_shared = len(shared_pages)
+        worst = pages_for(total_tokens, pool.page_size)
         if self.policy.reservation != "lazy":
-            slot = pool.admit(total_tokens)
+            slot = pool.admit_shared(max(worst - n_shared, 0), shared_pages)
         else:
-            need = min(pages_for(prompt_tokens, pool.page_size) + 1,
-                       pages_for(total_tokens, pool.page_size))
+            need = max(min(pages_for(prompt_tokens, pool.page_size) + 1,
+                           worst) - n_shared, 0)
             allocatable = pool.n_pages - 1
-            if (pool.n_active > 0 and pool.allocator.n_free - need
+            free_eq = pool.allocator.n_free + pool.n_reclaimable
+            if (pool.n_active > 0 and free_eq - need
                     < self.policy.watermark * allocatable):
                 self.admit_blocked += 1
                 return None
-            slot = pool.admit_pages(need)
+            slot = pool.admit_shared(need, shared_pages)
         if slot is not None and pool.n_active > self.peak_resident:
             self.peak_resident = pool.n_active
         return slot
@@ -140,7 +179,7 @@ class MemoryGovernor:
         allocatable = pool.n_pages - 1
         target = min(length + want_tokens, cap_tokens)
         while (reserved < target
-               and pool.allocator.n_free - 1
+               and pool.allocator.n_free + pool.n_reclaimable - 1
                >= self.policy.watermark * allocatable
                and pool.grow(slot)):
             self.grown_pages += 1
@@ -162,8 +201,18 @@ class MemoryGovernor:
         Requests already evicted ``max_preempts`` times are protected
         unless ``ignore_cap`` (the engine's oldest-request progress
         guarantee overrides the cap so the head of the line can always
-        finish).  Returns a slot id or None when nothing is eligible."""
-        best_key, best_slot = None, None
+        finish).
+
+        Among eligible residents the governor minimises *shared-page
+        cost* first: a page with refcount N serves N owners, so evicting
+        its mapper forfeits recompute that other requests (or future
+        prefix-cache hits) would otherwise skip.  LIFO admission order
+        breaks ties, and on a sharing-free pool every cost is zero so the
+        choice degrades to the original pure-LIFO rule.  Returns a slot
+        id or None when nothing is eligible."""
+        alloc = self.pool.allocator
+        best, best_slot = None, None            # best = (cost, admit key)
+        lifo_key, lifo_slot = None, None        # what pure LIFO would pick
         for slot, req in residents.items():
             if slot in exclude:
                 continue
@@ -172,15 +221,34 @@ class MemoryGovernor:
                 continue
             if not ignore_cap and req.n_preempts >= self.policy.max_preempts:
                 continue
-            if best_key is None or key > best_key:
-                best_key, best_slot = key, slot
+            cost = sum(1 for p in alloc.pages_of(slot) if alloc.refcount(p) > 1)
+            if best is None or cost < best[0] or (cost == best[0]
+                                                  and key > best[1]):
+                best, best_slot = (cost, key), slot
+            if lifo_key is None or key > lifo_key:
+                lifo_key, lifo_slot = key, slot
+        if best_slot is not None and best_slot != lifo_slot:
+            self.shared_spared += 1
         return best_slot
 
     # -- taps -----------------------------------------------------------------
     def note_step(self, n_stalled: int) -> None:
         """Record one decode step's memory state (the free-page trajectory
-        and stall counters the autotune corpus and reports read)."""
-        self.free_page_trace.append(self.pool.allocator.n_free)
+        and stall counters the autotune corpus and reports read).  The
+        trace is capped *at append time*: only every ``_trace_stride``-th
+        sample is kept, and when the buffer still fills the stride doubles
+        and the buffer is decimated in place — O(_TRACE_CAP) host memory
+        for a serve of any length.  ``free_pages_min`` is updated on every
+        step, so the reported minimum stays exact, not a sample."""
+        n_free = self.pool.allocator.n_free
+        if self.free_pages_min is None or n_free < self.free_pages_min:
+            self.free_pages_min = n_free
+        if self._trace_skip == 0:
+            self.free_page_trace.append(n_free)
+            if len(self.free_page_trace) >= self._TRACE_CAP:
+                self.free_page_trace = self.free_page_trace[::2]
+                self._trace_stride *= 2
+        self._trace_skip = (self._trace_skip + 1) % self._trace_stride
         if n_stalled:
             self.stall_steps += 1
             self.stall_slot_steps += n_stalled
@@ -190,8 +258,7 @@ class MemoryGovernor:
         ``"memory"``; the launcher's ``[pool]`` line and BENCH_serve.json
         print it next to the HBM high-water)."""
         alloc = self.pool.allocator
-        trace = self.free_page_trace
-        stride = max(len(trace) // 64, 1)       # bounded trajectory sample
+        trace = self.free_page_trace             # already capped at append
         return {
             "reservation": self.policy.reservation,
             "watermark": self.policy.watermark,
@@ -202,8 +269,12 @@ class MemoryGovernor:
             "admit_blocked": self.admit_blocked,
             "grown_pages": self.grown_pages,
             "peak_resident": self.peak_resident,
-            "free_pages_min": min(trace) if trace else alloc.n_free,
+            "shared_spared": self.shared_spared,
+            "free_pages_min": (self.free_pages_min
+                               if self.free_pages_min is not None
+                               else alloc.n_free),
             "free_pages_final": alloc.n_free,
-            "free_page_trace": trace[::stride][:64],
+            "free_page_trace": list(trace[:64]),
             "fragmentation": alloc.free_run_histogram(),
+            "prefix": self.pool.prefix_stats(),
         }

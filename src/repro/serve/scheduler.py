@@ -66,6 +66,9 @@ class Request:
     n_preempts: int = 0                 # times evicted by the governor
     t_preempt: Optional[float] = None   # pending eviction timestamp
     requeue_wait_s: float = 0.0         # total preempted->readmitted wait
+    prefix_hit_tokens: int = 0          # history tokens adopted from the
+                                        # prefix cache instead of prefilled
+                                        # (summed over re-admissions)
 
     def __post_init__(self):
         self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
@@ -221,4 +224,7 @@ def summarize(requests: Sequence[Request]) -> dict:
         "requeue_wait_p50_s": (float(np.percentile(waits, 50))
                                if waits.size else 0.0),
         "requeue_wait_max_s": float(waits.max()) if waits.size else 0.0,
+        # prefix-cache accounting (zeros with sharing off)
+        "prefix_hit_requests": sum(1 for r in requests if r.prefix_hit_tokens),
+        "prefix_hit_tokens": int(sum(r.prefix_hit_tokens for r in requests)),
     }

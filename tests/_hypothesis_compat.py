@@ -1,7 +1,7 @@
 """Minimal stand-in for the slice of hypothesis this suite uses.
 
 The property tests only need ``given``/``settings`` and the ``integers``,
-``sampled_from`` and ``lists`` strategies.  When real hypothesis is
+``sampled_from``, ``lists`` and ``tuples`` strategies.  When real hypothesis is
 installed the test modules import it directly; when it is absent they fall
 back to this shim, which draws ``max_examples`` deterministic pseudo-random
 examples per test (seeded rng, so failures are reproducible) instead of
@@ -42,6 +42,11 @@ class strategies:
             n = int(rng.integers(min_size, max_size + 1))
             return [elements.example(rng) for _ in range(n)]
         return _Strategy(draw)
+
+    @staticmethod
+    def tuples(*elements: _Strategy) -> _Strategy:
+        return _Strategy(
+            lambda rng: tuple(e.example(rng) for e in elements))
 
 
 def settings(max_examples: int = 20, **_ignored):
