@@ -306,8 +306,9 @@ def _overcommit_section(model, params, vocab: int) -> tuple[list, dict]:
 
 def _prefix_section(model, params, vocab: int) -> tuple[list, dict]:
     """Cross-request prefix caching: warm (``--prefix-cache on``) vs cold
-    (``off``) engines at the SAME ``--kv-pages``, served the same three
-    waves — A populates the index, B repeats the full 96-token prompt
+    (``off``) engines at the SAME ``--kv-pages`` under lazy reservation
+    (full mode trims the boundary page, see ``common`` below), served
+    the same three waves — A populates the index, B repeats the full 96-token prompt
     (full hits: admission maps the cached pages and decodes immediately),
     C shares only the first 48 tokens (partial hits: prefill covers just
     the suffix).  Gates: wave-B TTFT >= 5x faster warm than cold, prefill
@@ -337,9 +338,15 @@ def _prefix_section(model, params, vocab: int) -> tuple[list, dict]:
         return [Request(rid=3 + i, prompt=d.copy(), max_new_tokens=GEN_PF)
                 for i, d in enumerate(div)]
 
+    # lazy reservation on BOTH engines: full mode trims the partially
+    # adopted boundary page at admission (it never CoWs, preserving its
+    # preemption-free contract) and so prefills one suffix chunk on a
+    # full hit — lazy adopts the whole 95-token run and decodes
+    # immediately, which is the near-zero-TTFT + CoW path this section
+    # measures and gates
     common = dict(max_len=PROMPT_PF + GEN_PF + 1, max_slots=SLOTS_PF,
                   page_size=PAGE_PF, prefill_chunk=PAGE_PF, spec_depth=0,
-                  kv_pages=KV_PAGES_PF)
+                  kv_pages=KV_PAGES_PF, reservation="lazy")
     warm = Engine(model, params, serve_cfg=ServeConfig(
         **common, prefix_cache="on"))
     cold = Engine(model, params, serve_cfg=ServeConfig(

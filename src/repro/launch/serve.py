@@ -146,7 +146,10 @@ def main(argv=None):
                          "output stays bit-identical to a cold pool.  "
                          "'auto' lets the serve-time PlanDecider pick the "
                          "mem_prefix_on/mem_prefix_off candidates per "
-                         "load bucket (unset = off)")
+                         "load bucket (unset = off).  Forced off for MoE "
+                         "models: capacity groups route by token-group "
+                         "length, so suffix-only prefill would break "
+                         "bit-identity (same rule as speculation)")
     ap.add_argument("--spec-depth", default="auto",
                     choices=("auto", "0", "1", "2", "3", "4"),
                     help="speculative decode draft depth per pool step "

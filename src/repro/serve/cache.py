@@ -51,10 +51,19 @@ Two pool layouts back :meth:`repro.serve.engine.Engine.serve`:
   defensively).  When the free list runs dry, index-only pages
   (refcount 1, held just by the index) are reclaimed LRU-first
   (:meth:`PagedKVPool.reclaim_prefix`) before admission/growth gives up;
-  the :class:`repro.serve.memory.MemoryGovernor` counts these reclaimable
-  pages as free for watermark purposes and scores preemption victims by
-  how many *shared* pages they map (evicting a page with refcount N
-  throws away N requests' worth of recompute).
+  if even that yields no copy target but the page's only co-owner is the
+  index itself, the index's reference is dropped and the page becomes
+  private in place (no copy needed — one cache entry is sacrificed so
+  the write can always proceed).  The
+  :class:`repro.serve.memory.MemoryGovernor` counts reclaimable pages as
+  free for watermark purposes and scores preemption victims by how many
+  *shared* pages they map (evicting a page with refcount N throws away N
+  requests' worth of recompute).  Write-time CoW needs a free page a
+  fully-committed pool cannot promise, so under **full** reservation the
+  engine trims a partially-adopted boundary page from every prefix hit
+  at admission (only that page could ever be written) — full mode's
+  preemption-free contract survives sharing; **lazy** mode adopts the
+  partial page and CoWs on first write.
 
   The device state is pages only; block tables, per-slot lengths and the
   prefix index are host-side (the host is the source of truth for slot
@@ -111,6 +120,28 @@ class PageAllocator:
         self._owned: dict[Any, list[int]] = {}
         self._refcount: dict[int, int] = {}
         self.high_water = 0                     # peak live pages (frag metric)
+        # incremental solo accounting for one designated owner (track_solo)
+        self._solo_owner: Any = None
+        self._solo_pages: set[int] = set()      # that owner's pages (O(1) in)
+        self._solo = 0                          # of those, at refcount 1
+
+    def track_solo(self, owner) -> None:
+        """Designate ``owner`` for O(1) solo-page accounting:
+        :attr:`n_solo` is maintained incrementally across every refcount
+        transition and reports how many of ``owner``'s pages have
+        refcount 1 (it is their sole owner).  The pool tracks the prefix
+        index this way — its reclaimable-page count feeds every
+        per-slot per-step watermark check, where recomputing the sum
+        would scan all indexed pages each time."""
+        self._solo_owner = owner
+        self._solo_pages = set(self._owned.get(owner, ()))
+        self._solo = sum(1 for p in self._solo_pages
+                         if self._refcount[p] == 1)
+
+    @property
+    def n_solo(self) -> int:
+        """Pages solely owned by the :meth:`track_solo` owner — O(1)."""
+        return self._solo
 
     @property
     def n_free(self) -> int:
@@ -132,9 +163,15 @@ class PageAllocator:
         """Owners currently mapping ``page`` (0 = free / never allocated)."""
         return self._refcount.get(page, 0)
 
-    def _decref(self, page: int) -> bool:
-        """Drop one reference; True when the page was reclaimed."""
+    def _decref(self, page: int, owner) -> bool:
+        """Drop ``owner``'s reference; True when the page was reclaimed."""
         n = self._refcount[page] - 1
+        if owner == self._solo_owner:
+            self._solo_pages.discard(page)
+            if n == 0:
+                self._solo -= 1     # was solo-owned by the tracked owner
+        elif n == 1 and page in self._solo_pages:
+            self._solo += 1         # the tracked owner is now sole owner
         if n:
             self._refcount[page] = n
             return False
@@ -155,6 +192,9 @@ class PageAllocator:
         self._owned[owner] = pages
         for p in pages:
             self._refcount[p] = 1
+        if owner == self._solo_owner:
+            self._solo_pages.update(pages)
+            self._solo += len(pages)
         self.high_water = max(self.high_water, self.n_live)
         return list(pages)      # a copy: replace() edits the owned list
 
@@ -167,6 +207,9 @@ class PageAllocator:
         p = self._free.pop()
         self._owned[owner].append(p)
         self._refcount[p] = 1
+        if owner == self._solo_owner:
+            self._solo_pages.add(p)
+            self._solo += 1
         self.high_water = max(self.high_water, self.n_live)
         return p
 
@@ -188,6 +231,10 @@ class PageAllocator:
         for p in pages:
             self._owned[owner].append(p)
             self._refcount[p] += 1
+            if self._refcount[p] == 2 and p in self._solo_pages:
+                self._solo -= 1     # the tracked owner gained a co-owner
+            if owner == self._solo_owner:
+                self._solo_pages.add(p)     # refcount >= 2 here: not solo
 
     def free(self, owner) -> list[int]:
         """Unmap every page held by ``owner``; returns the pages actually
@@ -196,7 +243,7 @@ class PageAllocator:
         if owner not in self._owned:
             raise ValueError(f"owner {owner!r} holds no pages (double free?)")
         pages = self._owned.pop(owner)
-        return [p for p in reversed(pages) if self._decref(p)][::-1]
+        return [p for p in reversed(pages) if self._decref(p, owner)][::-1]
 
     def drop(self, owner, page: int) -> bool:
         """Unmap one ``page`` from ``owner`` (True when reclaimed)."""
@@ -204,7 +251,7 @@ class PageAllocator:
         if held is None or page not in held:
             raise ValueError(f"owner {owner!r} does not map page {page}")
         held.remove(page)
-        return self._decref(page)
+        return self._decref(page, owner)
 
     def replace(self, owner, old: int) -> Optional[int]:
         """Swap ``old`` for a fresh page *in place* in ``owner``'s mapping
@@ -220,8 +267,11 @@ class PageAllocator:
         new = self._free.pop()
         held[held.index(old)] = new
         self._refcount[new] = 1
+        if owner == self._solo_owner:
+            self._solo_pages.add(new)
+            self._solo += 1
         self.high_water = max(self.high_water, self.n_live)
-        self._decref(old)
+        self._decref(old, owner)
         return new
 
     def free_run_histogram(self) -> dict[int, int]:
@@ -265,6 +315,12 @@ class PageAllocator:
             "refcounts disagree with ownership maps"
         assert all(c >= 1 for c in self._refcount.values()), \
             "live page with refcount < 1"
+        if self._solo_owner is not None:
+            held = set(self._owned.get(self._solo_owner, ()))
+            assert self._solo_pages == held, "solo page set drifted"
+            want = sum(1 for p in held if self._refcount[p] == 1)
+            assert self._solo == want, \
+                f"solo count drifted ({self._solo} != {want})"
 
 
 # ---------------------------------------------------------------------------
@@ -401,6 +457,10 @@ class PagedKVPool:
         self.pages = jax.tree.map(
             lambda s: jnp.zeros(s.shape, s.dtype), pages_avals)
         self.allocator = PageAllocator(n_pages)
+        # reclaimable-page accounting is on every watermark check (per
+        # slot per step): the allocator maintains the index's solo count
+        # incrementally instead of scanning the indexed pages each time
+        self.allocator.track_solo(_PREFIX_OWNER)
         self.block_tables = np.zeros((n_slots, max_pages_per_slot), np.int32)
         self.lengths = np.zeros((n_slots,), np.int32)
         self._free_slots = list(range(n_slots - 1, -1, -1))
@@ -611,9 +671,11 @@ class PagedKVPool:
     @property
     def n_reclaimable(self) -> int:
         """Index-only pages (refcount 1): reclaimable on demand, so the
-        governor's watermark treats them as free."""
-        alloc = self.allocator
-        return sum(1 for p in self.prefix.pages() if alloc.refcount(p) == 1)
+        governor's watermark treats them as free.  O(1) — the allocator
+        keeps the count incremental (:meth:`PageAllocator.track_solo`);
+        this sits on the per-slot per-step watermark/growth hot path, so
+        a per-call scan over the indexed pages would not do."""
+        return self.allocator.n_solo
 
     def reclaim_prefix(self, n: int, keep: Sequence[int] = ()) -> int:
         """Evict up to ``n`` index-only prefix pages, least recently used
@@ -659,12 +721,27 @@ class PagedKVPool:
         return True
 
     def _cow(self, slot: int, idx: int) -> bool:
-        """Copy block-table entry ``idx`` of ``slot`` to a private page."""
+        """Copy block-table entry ``idx`` of ``slot`` to a private page.
+
+        When no copy target exists anywhere (free list dry, nothing
+        reclaimable) but the page's only co-owner is the prefix index,
+        the index's reference is dropped instead: the page becomes
+        private *in place* with no device copy, at the cost of one cache
+        entry.  Without this a slot sharing its page only with the index
+        could never be privatised — ``reclaim_prefix`` skips pages with
+        refcount > 1, so it cannot unpin the index's reference on the
+        slot's own page, and the serve loop would stall forever."""
         old = int(self.block_tables[slot, idx])
         if self.allocator.n_free == 0:
             self.reclaim_prefix(1)
         new = self.allocator.replace(slot, old)
         if new is None:
+            if (self.allocator.refcount(old) == 2
+                    and old in self.prefix.pages()):
+                self.prefix.drop_page(old)
+                self.allocator.drop(_PREFIX_OWNER, old)
+                self.prefix_evictions += 1
+                return True
             return False
         if self._cow_fn is None:
             self._cow_fn = jax.jit(_cow_copy, donate_argnums=(0,))

@@ -429,7 +429,14 @@ class Engine:
         plan's attn-region knob (the PlanDecider's mem_prefix_on /
         mem_prefix_off channel) decides; unset means off.  Sharing is
         bit-identical either way — this knob trades index/CoW overhead
-        against prefill savings per load bucket."""
+        against prefill savings per load bucket.  Forced off for MoE
+        (mirroring :meth:`spec_depth_for`): capacity groups route by
+        token-group length, so prefilling only the un-matched suffix —
+        zero-padded back to the feed length — would route (and drop)
+        tokens differently than whole-prompt cold prefill, producing
+        different suffix K/V and breaking bit-identity."""
+        if self.model.cfg.n_experts:
+            return False
         if self.cfg.prefix_cache in ("on", "off"):
             return self.cfg.prefix_cache == "on"
         return plan.config_for("layer0/attn").prefix_cache == "on"
@@ -995,6 +1002,18 @@ class Engine:
                 # mapped shared and skipped by prefill — this includes a
                 # preempted request re-hitting pages it published itself
                 shared, matched = pool.prefix_lookup(hist)
+                if (shared and gov.policy.reservation != "lazy"
+                        and matched < len(shared) * pool.page_size):
+                    # full reservation guarantees preemption-free decode,
+                    # and the only shared page a request can ever write is
+                    # a partially-adopted boundary page (its first fresh
+                    # row lands mid-page) — privatising it at write time
+                    # needs a free page a fully-committed pool cannot
+                    # promise.  Trim the hit to fully-covered pages so a
+                    # full-mode slot never CoWs; the boundary rows are
+                    # prefilled fresh instead.
+                    shared = shared[:-1]
+                    matched = len(shared) * pool.page_size
                 slot = gov.admit(hist.size, total, shared_pages=shared)
                 if slot is None:            # head-of-line waits for memory
                     return

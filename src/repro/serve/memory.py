@@ -131,7 +131,13 @@ class MemoryGovernor:
         request's worst case.  ``shared_pages`` is the prompt's cached
         leading page run (a prefix-index hit): both modes map it and
         reserve only the *fresh* remainder.  Full mode reserves the whole
-        remainder atomically; lazy mode takes the un-shared prompt pages
+        remainder atomically and stays preemption-free under sharing
+        because the engine never passes it a partially-covered boundary
+        page (the only shared page a request could ever write, whose CoW
+        would need a free page at write time that a fully-committed pool
+        cannot promise — see ``Engine.serve``'s admission path); lazy
+        mode adopts partial boundary pages and copies on first write.
+        Lazy mode takes the un-shared prompt pages
         plus one decode page — never more than the worst case — and only
         while free-equivalent pages (free list + reclaimable index-only
         pages) stay above the watermark."""
@@ -258,7 +264,11 @@ class MemoryGovernor:
         ``"memory"``; the launcher's ``[pool]`` line and BENCH_serve.json
         print it next to the HBM high-water)."""
         alloc = self.pool.allocator
-        trace = self.free_page_trace             # already capped at append
+        # the decimated buffer holds up to ~2x 64 samples between stride
+        # doublings: stride (never truncate) down to <= 64 so the
+        # reported trajectory still spans the whole serve
+        trace = self.free_page_trace
+        s = max(-(-len(trace) // 64), 1)
         return {
             "reservation": self.policy.reservation,
             "watermark": self.policy.watermark,
@@ -274,7 +284,7 @@ class MemoryGovernor:
                                if self.free_pages_min is not None
                                else alloc.n_free),
             "free_pages_final": alloc.n_free,
-            "free_page_trace": list(trace[:64]),
+            "free_page_trace": list(trace[::s][:64]),
             "fragmentation": alloc.free_run_histogram(),
             "prefix": self.pool.prefix_stats(),
         }

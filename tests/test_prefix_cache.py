@@ -89,8 +89,12 @@ def test_allocator_drop_and_replace():
 def test_allocator_share_free_sequences_conserve_pages(ops):
     """Random share/free/drop/replace interleavings: refcounts always
     equal the number of owners mapping each page, pages are reclaimed
-    exactly at refcount zero, and freeing everyone restores the pool."""
+    exactly at refcount zero, and freeing everyone restores the pool.
+    One owner is under incremental solo accounting (track_solo), so
+    check_invariants also cross-checks the O(1) counter against a
+    recount at every step."""
     a = PageAllocator(12)
+    a.track_solo("o1")
     owners = {}
     for i, (op, owner_i) in enumerate(ops):
         name = f"o{owner_i}"
@@ -236,6 +240,35 @@ def test_pool_rollback_defensively_privatises():
     pool.allocator.check_invariants()
 
 
+def test_cow_drops_index_ref_when_free_list_dry():
+    """A page shared only with the prefix index, a dry free list and no
+    other reclaimable page: reclaim_prefix skips refcount-2 pages so it
+    can never unpin the index's reference on the slot's own page — CoW
+    must privatise *in place* by dropping the index's reference (no
+    device copy) instead of failing and stalling the slot forever."""
+    pool = _pool(n_pages=7, ps=8, n_slots=4, max_pages=6)
+    toks = np.arange(17, dtype=np.int32)
+    s0 = pool.admit_pages(3)
+    pool.advance(s0, 16)
+    pool.register_prefix(s0, toks)        # 2 pages indexed
+    pool.release(s0)
+    shared, matched = pool.prefix_lookup(toks[:16])    # capped at 15
+    assert matched == 15 and len(shared) == 2
+    s1 = pool.admit_shared(1, shared)
+    pool.advance(s1, matched)
+    assert pool.admit_pages(3) is not None             # free list now dry
+    assert pool.allocator.n_free == 0 and pool.n_reclaimable == 0
+    old = int(pool.block_tables[s1, 1])
+    assert pool.allocator.refcount(old) == 2           # s1 + the index
+    # the write into row 15 proceeds: same page, now private, entry gone
+    assert pool.cow_for_write(s1, 1)
+    assert int(pool.block_tables[s1, 1]) == old
+    assert pool.allocator.refcount(old) == 1
+    assert pool.cow_copies == 0 and pool.prefix_evictions == 1
+    assert pool.prefix_lookup(toks[:16])[0] == shared[:1]   # chain broken
+    pool.allocator.check_invariants()
+
+
 def test_pool_preempt_of_sharer_never_frees_survivor_pages():
     pool = _pool()
     toks = np.arange(25, dtype=np.int32)
@@ -351,6 +384,10 @@ def test_pool_share_cow_release_property(ops, seed):
             slots.remove(s := slots[rng.integers(len(slots))])
             pool.release(s)
         pool.allocator.check_invariants()
+        # the incremental reclaimable counter always matches a recount
+        assert pool.n_reclaimable == sum(
+            1 for p in pool.prefix.pages()
+            if pool.allocator.refcount(p) == 1)
         for p in idx_pages:               # the index never loses its pages
             assert pool.allocator.refcount(p) >= 1
     for s in slots:
@@ -447,9 +484,20 @@ def test_free_page_trace_bounded_with_exact_min():
             slot = pool.admit_pages(2)
         gov.note_step(0)
     assert len(gov.free_page_trace) < gov._TRACE_CAP
+    # a lower-occupancy regime at the very END of the serve: the summary
+    # must stride across the whole buffer, not truncate it — the old
+    # trace[:64] reported only the first 64 samples and silently dropped
+    # the last portion of a long serve
+    for _ in range(3):
+        pool.admit_pages(6)
+    end_free = pool.allocator.n_free
+    assert end_free < min(lows)
+    for _ in range(400):
+        gov.note_step(0)
     s = gov.summary()
-    assert s["free_pages_min"] == min(lows)        # exact, not sampled
+    assert s["free_pages_min"] == end_free         # exact, not sampled
     assert len(s["free_page_trace"]) <= 64
+    assert min(s["free_page_trace"]) <= end_free   # tail regime reported
 
 
 # ---------------------------------------------------------------------------
@@ -502,7 +550,14 @@ def test_prefix_serving_bit_identical_and_saves_prefill(shared_trace):
         assert rw.out_tokens == rc.out_tokens, f"req {rw.rid} diverged"
     pf = res["memory"]["prefix"]
     assert pf["hit_requests"] >= 2 and pf["tokens_saved"] > 0
-    assert pf["cow_copies"] >= 1          # full hits write mid-shared-page
+    # default reservation is full: the engine trims the partially-adopted
+    # boundary page at admission, so every adopted run is page-aligned
+    # and a full-mode serve never CoWs — nor preempts/stalls (the
+    # preemption-free contract survives sharing)
+    assert pf["cow_copies"] == 0
+    assert pf["tokens_saved"] % 8 == 0
+    assert res["memory"]["preemptions"] == 0
+    assert res["memory"]["stall_steps"] == 0
     s = summarize(warm_reqs)
     assert s["prefix_hit_tokens"] == pf["tokens_saved"]
     assert s["prefix_hit_requests"] == pf["hit_requests"]
@@ -531,3 +586,56 @@ def test_prefix_serving_survives_overcommit_preemption(shared_trace):
         assert rw.out_tokens == rc.out_tokens, f"req {rw.rid} diverged"
     eng._pool.allocator.check_invariants()
     assert res["memory"]["prefix"]["tokens_saved"] > 0
+
+
+def test_prefix_lazy_mode_cows_partial_boundary_page(shared_trace):
+    """Lazy reservation adopts the partially-covered boundary page of a
+    full-prefix hit (matched is capped at hist-1, landing mid-page), so
+    the hit's first decode write must privatise it — with 2 slots the
+    later requests admit after the donor published its full run, which
+    pins the mid-page shape.  Output stays bit-identical throughout."""
+    from repro.serve.scheduler import RequestState
+    model, params, mk = shared_trace
+    cold_reqs = mk()
+    _engine(model, params, "off").serve(cold_reqs)
+    eng = _engine(model, params, "on", reservation="lazy")
+    reqs = mk()
+    res = eng.serve(reqs)
+    for rc, rw in zip(cold_reqs, reqs):
+        assert rw.state is RequestState.DONE
+        assert rw.out_tokens == rc.out_tokens, f"req {rw.rid} diverged"
+    assert res["memory"]["prefix"]["cow_copies"] >= 1
+    eng._pool.allocator.check_invariants()
+
+
+def test_moe_prefix_cache_forced_off_bit_identical():
+    """MoE capacity groups route by token-group length, so prefilling
+    only a cache-hit suffix (zero-padded back to the feed length) would
+    route — and drop — tokens differently than whole-prompt cold
+    prefill, diverging the suffix K/V.  The engine therefore forces
+    prefix sharing off for n_experts models (mirroring the spec-depth
+    gate), and ``--prefix-cache on`` stays bit-identical to ``off``."""
+    from repro.configs.registry import get_config
+    from repro.models.model import build
+    from repro.serve.scheduler import Request, RequestState
+    cfg = get_config("granite-moe-1b-a400m").reduced()
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0), dtype=jnp.float32)
+    rng = np.random.default_rng(3)
+    P = rng.integers(0, cfg.vocab_size, (24,)).astype(np.int32)
+
+    def mk():
+        return [Request(rid=i, prompt=P.copy(), max_new_tokens=6)
+                for i in range(3)]
+
+    off_reqs, on_reqs = mk(), mk()
+    _engine(model, params, "off").serve(off_reqs)
+    on = _engine(model, params, "on")
+    assert on.prefix_cache_for(on.plan) is False       # forced off for MoE
+    res = on.serve(on_reqs)
+    pf = res["memory"]["prefix"]
+    assert not pf["enabled"]
+    assert pf["hit_requests"] == 0 and pf["tokens_saved"] == 0
+    for ro, rn in zip(off_reqs, on_reqs):
+        assert rn.state is RequestState.DONE
+        assert rn.out_tokens == ro.out_tokens, f"req {rn.rid} diverged"
