@@ -55,6 +55,14 @@ pages (``shared_spared``).  Gated by CI's ``prefix-smoke`` job via
 ``ratios.prefix_hit_ttft_speedup``; ``--prefix-only`` runs just this
 section.
 
+The **tp rows** compare ``--tp 2`` vs ``--tp 1`` serving on the identical
+trace over a device mesh (CI forces host devices via ``XLA_FLAGS``):
+sharding the paged pool on the kv-head axis leaves page counts and the
+global footprint unchanged, so the gated win is per-device KV HBM
+high-water <= ~55% of tp1's, with bit-identical greedy tokens.  Gated by
+CI's ``tp-smoke`` job via ``ratios.tp2_per_device_high_water``;
+``--tp-only`` runs just this section (skip-note on a 1-device host).
+
 Row format: ``name,us_per_token,tok_per_s`` (plus derived ratio rows).
 After a run, :data:`json_summary` holds the machine-readable record
 (tok/s, latency percentiles, TTFT for every path, HBM high-water,
@@ -123,6 +131,12 @@ KV_PAGES_PF = 29               # IDENTICAL for warm and cold (2 slots x 14
 # divert the preemption to an unshared (cheaper) resident instead
 KV_PAGES_EV = 20
 MAX_LEN_EV = 109
+
+# -- tp section (tensor-parallel sharded serving: --tp 2 vs --tp 1) ----------
+PROMPT_TP = 12
+GENS_TP = [12, 8, 10, 8]
+PAGE_TP = 8
+SLOTS_TP = 3
 
 
 def _trace(vocab: int, n_req: int = N_REQ) -> list[Request]:
@@ -457,6 +471,74 @@ def _prefix_section(model, params, vocab: int) -> tuple[list, dict]:
     return rows, section
 
 
+def _tp_section(model, params, vocab: int) -> tuple[list, dict]:
+    """Tensor-parallel sharded serving: ``tp=2`` vs ``tp=1`` on the
+    identical staggered trace.  The paged pool shards on the kv-head axis,
+    so page COUNTS (and the global footprint) are tp-invariant — the win
+    CI gates on is *per-device* KV HBM: each tp2 device must hold <= ~55%
+    of a tp1 device's high-water bytes, with the greedy token streams
+    bit-identical (asserted here, gated by the ``tp-smoke`` job via
+    ``ratios.tp2_per_device_high_water``).  ``--tp-only`` runs just this
+    section.
+
+    Needs >= 2 devices (CI forces host devices via ``XLA_FLAGS``); on a
+    single-device host the section records a skip note instead of
+    failing, so local `--smoke` runs stay green."""
+    n_dev = len(jax.devices())
+    if n_dev < 2:
+        rows = ["serve_tp_skipped,1,single_device_host"]
+        return rows, {
+            "devices": n_dev,
+            "skipped": ("needs >= 2 devices: run under XLA_FLAGS="
+                        "--xla_force_host_platform_device_count=4"),
+        }
+    rng = np.random.default_rng(17)
+    prompts = rng.integers(0, vocab, (len(GENS_TP), PROMPT_TP)).astype(
+        np.int32)
+
+    def mk():
+        return [Request(rid=i, prompt=prompts[i].copy(), max_new_tokens=g,
+                        arrival_s=GAP_S * i)
+                for i, g in enumerate(GENS_TP)]
+
+    common = dict(max_len=PROMPT_TP + max(GENS_TP) + 1, max_slots=SLOTS_TP,
+                  page_size=PAGE_TP, prefill_chunk=PAGE_TP, spec_depth=0)
+    sec: dict = {"devices": n_dev}
+    reqs = {}
+    for tp in (1, 2):
+        eng = Engine(model, params, serve_cfg=ServeConfig(**common, tp=tp))
+        eng.serve(mk())                   # warm: compile + first placement
+        eng._pool.reset_high_water()
+        rs = mk()
+        res = eng.serve(rs)
+        reqs[tp] = rs
+        pool = eng._pool
+        sec[f"tp{tp}"] = {
+            "tok_per_s": res["stats"]["tok_per_s"],
+            "ttft_p50_s": res["stats"]["ttft_p50_s"],
+            "mesh": res["mesh"],
+            "hbm_bytes": pool.hbm_bytes(),
+            "per_device_hbm_bytes": pool.per_device_hbm_bytes(),
+            "high_water_bytes": pool.high_water_bytes(),
+            "per_device_high_water_bytes": pool.per_device_high_water_bytes(),
+        }
+    for a, b in zip(reqs[2], reqs[1]):
+        assert a.out_tokens == b.out_tokens, (
+            f"tp=2 changed request {a.rid}'s greedy tokens")
+    sec["bit_identical"] = True
+    ratio = (sec["tp2"]["per_device_high_water_bytes"]
+             / max(sec["tp1"]["per_device_high_water_bytes"], 1))
+    sec["per_device_high_water_ratio"] = ratio
+    rows = [
+        (f"serve_tp1,{1e6 / max(sec['tp1']['tok_per_s'], 1e-9):.1f},"
+         f"{sec['tp1']['tok_per_s']:.1f}"),
+        (f"serve_tp2,{1e6 / max(sec['tp2']['tok_per_s'], 1e-9):.1f},"
+         f"{sec['tp2']['tok_per_s']:.1f}"),
+        f"serve_tp2_per_device_high_water,{ratio:.2f},gate<=0.55",
+    ]
+    return rows, sec
+
+
 def _best_of(engine: Engine, base: list[Request], n: int = 2):
     """Serve the identical trace ``n`` times and keep the fastest run —
     wall-clock serving of sub-30ms steps is noisy on shared CPU, and the
@@ -471,7 +553,7 @@ def _best_of(engine: Engine, base: list[Request], n: int = 2):
 
 
 def run(smoke: bool = False, overcommit_only: bool = False,
-        prefix_only: bool = False):
+        prefix_only: bool = False, tp_only: bool = False):
     global json_summary
     # smoke keeps the same 8-request trace (the CI guard gates on ratios
     # that need the full concurrency of the mixed-length trace) but takes
@@ -506,6 +588,18 @@ def run(smoke: bool = False, overcommit_only: bool = False,
             "ratios": {"prefix_hit_ttft_speedup":
                        pf_sec["cold"]["ttft_p50_s"]
                        / max(pf_sec["warm"]["ttft_p50_s"], 1e-9)},
+        }
+        return
+    if tp_only:
+        # the focused tensor-parallel gate (CI's tp-smoke job): tp2 vs tp1
+        # bit-identity + per-device KV HBM halving, nothing else
+        tp_rows, tp_sec = _tp_section(model, params, cfg.vocab_size)
+        yield from tp_rows
+        json_summary = {
+            "arch": ARCH, "smoke": smoke, "tp_only": True, "tp": tp_sec,
+            "ratios": ({"tp2_per_device_high_water":
+                        tp_sec["per_device_high_water_ratio"]}
+                       if "per_device_high_water_ratio" in tp_sec else {}),
         }
         return
     max_len = PROMPT + max(GENS) + 1
@@ -658,6 +752,10 @@ def run(smoke: bool = False, overcommit_only: bool = False,
     pf_rows, pf_sec = _prefix_section(model, params, cfg.vocab_size)
     yield from pf_rows
 
+    # -- tensor-parallel sharded serving (skip-note on a 1-device host)
+    tp_rows, tp_sec = _tp_section(model, params, cfg.vocab_size)
+    yield from tp_rows
+
     mem_p = res_p.get("memory", {})
     json_summary = {
         "arch": ARCH, "slots": SLOTS, "page_size": PAGE,
@@ -745,7 +843,11 @@ def run(smoke: bool = False, overcommit_only: bool = False,
         "inflight_at_fixed_hbm": {"paged": paged_cap, "slot": slot_cap},
         "overcommit": oc,
         "prefix": pf_sec,
+        "tp": tp_sec,
     }
+    if "per_device_high_water_ratio" in tp_sec:
+        json_summary["ratios"]["tp2_per_device_high_water"] = (
+            tp_sec["per_device_high_water_ratio"])
 
 
 def write_json(path: str = "BENCH_serve.json") -> None:
@@ -758,11 +860,13 @@ if __name__ == "__main__":
     smoke = "--smoke" in sys.argv
     oc_only = "--overcommit-only" in sys.argv
     pf_only = "--prefix-only" in sys.argv
+    tp_only = "--tp-only" in sys.argv
     for row in run(smoke=smoke, overcommit_only=oc_only,
-                   prefix_only=pf_only):
+                   prefix_only=pf_only, tp_only=tp_only):
         print(row)
     write_json()
     print(f"# wrote BENCH_serve.json (smoke={smoke} "
-          f"overcommit_only={oc_only} prefix_only={pf_only})")
-    if smoke and not oc_only and not pf_only:
+          f"overcommit_only={oc_only} prefix_only={pf_only} "
+          f"tp_only={tp_only})")
+    if smoke and not oc_only and not pf_only and not tp_only:
         assert json_summary["paged"]["tok_per_s"] > 0, "smoke run produced 0 tok/s"

@@ -120,6 +120,21 @@ def default_candidates(kind: str = "train") -> list[Candidate]:
                       "attn", serve_only=True),
             Candidate("mem_prefix_off", RegionConfig(prefix_cache="off"),
                       "attn", serve_only=True),
+            # tensor-parallel degree of the sharded serve step (the paper's
+            # per-region worker count asked at cluster scale): small-batch
+            # decode is latency/collective-bound and wants low tp;
+            # large-batch prefill is flops-bound and wants the model axis
+            # wide.  Greedy output is bit-identical across degrees, so the
+            # decider trades pure throughput.  Unlike the mem_* knobs this
+            # DOES reshape the compiled step (the step cache keys on it and
+            # a change forces one recompile + pool reshard).  Degrees the
+            # host mesh cannot satisfy clamp down at resolution time.
+            Candidate("tp1", RegionConfig(tp_degree=1), "attn",
+                      serve_only=True),
+            Candidate("tp2", RegionConfig(tp_degree=2), "attn",
+                      serve_only=True),
+            Candidate("tp4", RegionConfig(tp_degree=4), "attn",
+                      serve_only=True),
         ]
     return cands
 

@@ -34,6 +34,18 @@ def _fkey(features) -> Tuple[float, ...]:
     return tuple(round(float(v), _ROUND) for v in np.asarray(features).ravel())
 
 
+def bucket_rate(rate: float, levels: int = 10) -> float:
+    """Quantize a [0, 1] rate to ``levels`` buckets before featurising.
+
+    Raw hit rates carry per-window float jitter; keyed at ``_ROUND``
+    decimals every window would mint a fresh measurement point and the
+    dedup/running-mean machinery above would never merge anything.
+    Deciles keep the signal (cold / warming / hot) without the shatter.
+    """
+    r = min(max(float(rate), 0.0), 1.0)
+    return round(math.floor(r * levels) / levels, _ROUND) if r < 1.0 else 1.0
+
+
 @dataclasses.dataclass
 class CorpusEntry:
     """One deduplicated observation (``n`` raw observations merged; the

@@ -22,11 +22,17 @@ import numpy as np
 FEATURE_NAMES = (
     "log_flops", "log_bytes", "log_collective_bytes", "log_link_bytes",
     "arithmetic_intensity", "collective_fraction", "ops",
+    "prefix_hit_rate",
 )
 
 
 def features(c) -> np.ndarray:
-    """Counter vector -> feature vector (c: counters.Counters)."""
+    """Counter vector -> feature vector (c: counters.Counters).
+
+    Nodes store feature *indices*, so appending new channels keeps trees
+    serialised before the channel existed predict-safe; getattr defaults
+    cover counter objects that predate the channel.
+    """
     eps = 1.0
     ai = c.flops / (c.bytes + eps)
     coll_frac = c.link_bytes / (c.bytes + c.link_bytes + eps)
@@ -34,6 +40,7 @@ def features(c) -> np.ndarray:
         np.log10(c.flops + eps), np.log10(c.bytes + eps),
         np.log10(c.collective_bytes + eps), np.log10(c.link_bytes + eps),
         ai, coll_frac, float(c.ops),
+        float(getattr(c, "prefix_hit_rate", 0.0)),
     ])
 
 

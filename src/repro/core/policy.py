@@ -124,6 +124,11 @@ class RegionConfig:
     prefix_cache: str = ""  # cross-request KV prefix sharing ('' = unset;
                             # 'on' = share + copy-on-write; 'off' = cold
                             # pool per request)
+    tp_degree: int = 0      # serve-engine tensor-parallel degree: mesh
+                            # "model"-axis width the paged pool and step
+                            # shard over (0 = knob unset; 1 = single-shard).
+                            # Reshapes the compiled step — the step cache
+                            # keys on it, unlike the allocator-policy knobs.
 
     def to_json(self):
         return dataclasses.asdict(self)

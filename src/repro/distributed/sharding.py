@@ -27,6 +27,12 @@ BATCH_AXES = {
 CACHE_AXES = {
     "k": ("batch", "kv_seq", "kv_heads", "head_dim"),
     "v": ("batch", "kv_seq", "kv_heads", "head_dim"),
+    # paged pools: (n_pages, page_size, kv_heads, head_dim).  Page id and
+    # in-page position stay replicated — the host-side block table indexes
+    # them on every shard — so tensor parallelism splits only the kv-head
+    # dim: each shard holds kv_heads/tp heads of EVERY page.
+    "k_pages": (None, None, "kv_heads", "head_dim"),
+    "v_pages": (None, None, "kv_heads", "head_dim"),
     "s": ("batch", "ssm_heads", None, None),
     "x_prev": ("batch", "embed"),
     "conv_x": ("batch", None, "ssm_dim"),

@@ -41,6 +41,29 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
+def shard_kv_heads(kv_heads: int, tp: int) -> int:
+    """KV heads each shard sees under a ``tp``-way mesh "model" axis.
+
+    Tensor parallelism splits the page pool on the kv-head dim only
+    (pages: ``(P, page_size, KVH/tp, HD)`` per shard) — page ids, in-page
+    positions, and the host-side block table are identical on every shard,
+    so the kernel's grid ``(B, max_pages, page_size // block_k)`` and its
+    per-page DMA pattern are unchanged; each shard simply runs the same
+    kernel over ``kv_heads // tp`` heads (q is sharded on the same KVH axis
+    by GQA grouping, so the ``page layout mismatch`` assert still holds
+    per shard).  Raises when the head count cannot split evenly — the
+    engine clamps requested degrees through this rule before building a
+    sharded step.
+    """
+    if tp < 1:
+        raise ValueError(f"tp must be >= 1, got {tp}")
+    if kv_heads % tp:
+        raise ValueError(
+            f"tp={tp} does not divide kv_heads={kv_heads}: pages shard on "
+            f"the kv-head axis, so the degree must split heads evenly")
+    return kv_heads // tp
+
+
 def _paged_mq_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
                      m_ref, l_ref, acc_ref, *,
                      scale: float, page_size: int, bk: int, n_tiles: int,

@@ -29,9 +29,17 @@ def make_production_mesh(*, multi_pod: bool = False):
 
 
 def make_host_mesh(data: int = 1, model: int = 1):
-    """Small mesh over whatever devices exist (CPU tests)."""
+    """Small mesh over whatever devices exist (CPU tests).
+
+    The requested ``model`` (tensor-parallel) degree takes priority: it is
+    clamped only by the total device count, and ``data`` then fits into
+    whatever remains.  Clamping ``data`` first would funnel ``model``
+    through ``n // data`` and silently drop a tp degree the host (e.g. one
+    forced via ``XLA_FLAGS=--xla_force_host_platform_device_count``) can
+    actually satisfy.
+    """
     n = len(jax.devices())
-    data = min(data, n)
-    model = max(min(model, n // data), 1)
+    model = max(min(model, n), 1)
+    data = max(min(data, n // model), 1)
     return jax.make_mesh((data, model), ("data", "model"),
                          **_axis_types_kwargs(2))

@@ -160,6 +160,26 @@ def main(argv=None):
                          "serve-time PlanDecider pick the spec0/spec2/spec4 "
                          "decode candidates per load bucket from occupancy-"
                          "scaled counters (requires --dtree; otherwise off)")
+    ap.add_argument("--tp", default="1", choices=("1", "2", "4", "auto"),
+                    help="tensor-parallel degree of the paged serve step "
+                         "over the device mesh's 'model' axis: K/V pages "
+                         "shard on the kv-head dim (block tables stay "
+                         "host-side and replicated, so the paged-attention "
+                         "gather is unchanged per shard), attention/MLP/"
+                         "unembed params shard on their logical axes, and "
+                         "the vocab-sharded logits replicate once at the "
+                         "sampling boundary — greedy output is "
+                         "bit-identical across degrees.  Mesh selection: "
+                         "the engine uses its plan's mesh when the model "
+                         "axis matches, else builds a (1, tp) host mesh "
+                         "over whatever devices exist (on CPU force them "
+                         "with XLA_FLAGS=--xla_force_host_platform_"
+                         "device_count=N).  Degrees the host or the "
+                         "model's kv-head count cannot satisfy clamp "
+                         "down.  'auto' lets the serve-time PlanDecider "
+                         "pick the tp1/tp2/tp4 candidates per load "
+                         "bucket (unset = 1); a tp switch costs one step "
+                         "recompile + one pool reshard")
     ap.add_argument("--max-len", type=int, default=0,
                     help="cache length (default: prompt+gen headroom)")
     ap.add_argument("--temperature", type=float, default=0.0)
@@ -217,6 +237,7 @@ def main(argv=None):
         reservation=args.reservation, mem_watermark=args.mem_watermark,
         max_preempts=args.max_preempts, prefix_cache=args.prefix_cache,
         spec_depth=-1 if args.spec_depth == "auto" else int(args.spec_depth),
+        tp=0 if args.tp == "auto" else int(args.tp),
         online_retrain=args.online_retrain,
         retrain_interval=args.retrain_interval,
         explore_eps=0.0 if args.no_explore else args.explore_eps,
@@ -249,6 +270,14 @@ def main(argv=None):
           f"p99 {s['latency_p99_s']*1e3:.0f} ms")
     if args.mode == "continuous" and engine._paged:
         pool = engine._pool
+        mesh_info = res.get("mesh", {})
+        if mesh_info:
+            print(f"[mesh] tp={mesh_info['tp']} "
+                  f"devices={mesh_info['devices']} "
+                  f"hbm_per_device="
+                  f"{mesh_info['hbm_bytes_per_device']/2**20:.1f} MiB "
+                  f"high_water_per_device="
+                  f"{mesh_info['high_water_bytes_per_device']/2**20:.1f} MiB")
         print(f"[paged] page_size={pool.page_size} pages={pool.n_pages} "
               f"pool={pool.hbm_bytes()/2**20:.1f} MiB "
               f"high-water={pool.high_water_bytes()/2**20:.1f} MiB "

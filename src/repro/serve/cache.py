@@ -445,7 +445,8 @@ class PagedKVPool:
     """
 
     def __init__(self, pages_avals: Any, n_slots: int, page_size: int,
-                 n_pages: int, max_pages_per_slot: int):
+                 n_pages: int, max_pages_per_slot: int,
+                 shardings: Any = None):
         if n_slots < 1:
             raise ValueError("n_slots must be >= 1")
         if page_size < 1:
@@ -454,8 +455,23 @@ class PagedKVPool:
         self.page_size = page_size
         self.n_pages = n_pages
         self.max_pages_per_slot = max_pages_per_slot
-        self.pages = jax.tree.map(
-            lambda s: jnp.zeros(s.shape, s.dtype), pages_avals)
+        # tensor-parallel shard count of the pages pytree (mesh "model"
+        # axis over kv_heads).  Page/slot/watermark arithmetic is all in
+        # page COUNTS, which sharding leaves untouched (every shard holds
+        # a kv-head slice of EVERY page) — only the per_device_* byte
+        # views below divide by it.
+        self.tp_shards = 1
+        if shardings is None:
+            self.pages = jax.tree.map(
+                lambda s: jnp.zeros(s.shape, s.dtype), pages_avals)
+        else:
+            # build each leaf directly into its mesh placement (no
+            # single-device materialisation then reshard)
+            self.pages = jax.tree.map(
+                lambda s, sh: jax.jit(
+                    lambda: jnp.zeros(s.shape, s.dtype),
+                    out_shardings=sh)(),
+                pages_avals, shardings)
         self.allocator = PageAllocator(n_pages)
         # reclaimable-page accounting is on every watermark check (per
         # slot per step): the allocator maintains the index's solo count
@@ -473,6 +489,8 @@ class PagedKVPool:
         self.prefix_tokens_saved = 0        # prompt tokens skipped by sharing
         self.cow_copies = 0                 # shared pages privatised pre-write
         self.prefix_evictions = 0           # index-only pages reclaimed
+        self.dedup_holds = 0                # admissions held for an identical
+                                            # in-flight prompt to publish
         self._cow_fn = None                 # lazily-jitted device page copy
 
     # -- slot accounting -----------------------------------------------------
@@ -764,6 +782,7 @@ class PagedKVPool:
             "tokens_saved": self.prefix_tokens_saved,
             "cow_copies": self.cow_copies,
             "evictions": self.prefix_evictions,
+            "dedup_holds": self.dedup_holds,
         }
 
     # -- memory accounting ---------------------------------------------------
@@ -785,6 +804,19 @@ class PagedKVPool:
         """Restart the peak-live-pages ratchet (e.g. after a warm-up trace
         whose admission pattern shouldn't count against the measured run)."""
         self.allocator.high_water = self.allocator.n_live
+
+    # per-device views: pages shard on the kv-head dim over ``tp_shards``
+    # devices, so each device holds exactly 1/tp of every page's bytes.
+    # The MemoryGovernor's watermark math stays in (tp-invariant) page
+    # counts; these are the byte-level truth for per-device HBM reports.
+    def per_device_page_bytes(self) -> int:
+        return self.page_bytes() // self.tp_shards
+
+    def per_device_hbm_bytes(self) -> int:
+        return self.hbm_bytes() // self.tp_shards
+
+    def per_device_high_water_bytes(self) -> int:
+        return self.high_water_bytes() // self.tp_shards
 
 
 # ---------------------------------------------------------------------------

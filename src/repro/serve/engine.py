@@ -98,13 +98,15 @@ from typing import Any, Optional, Sequence
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
 
 from repro.autotune.candidates import canonical
 from repro.autotune.decider import PlanDecider  # noqa: F401  (re-export:
                                                 # moved to repro.autotune)
 from repro.core.policy import RegionConfig, RegionPlan, null_plan
 from repro.models.model import Model
-from repro.serve.scheduler import Request, Scheduler, summarize
+from repro.serve.scheduler import Request, RequestState, Scheduler, summarize
 
 
 @dataclasses.dataclass
@@ -162,6 +164,17 @@ class ServeConfig:
     spec_depth: int = -1        # draft tokens per pool step: -1 = auto (the
                                 # plan's attn-region spec_depth knob, the
                                 # PlanDecider's channel); 0 = off; N>0 fixed
+    # -- tensor parallelism (mesh-sharded paged serving) ---------------------
+    tp: int = 0                 # tensor-parallel degree over the mesh
+                                # "model" axis (pages shard on kv_heads,
+                                # params on their logical axes, one
+                                # all-gather at the sampling boundary):
+                                # 0 = auto (the plan's attn-region
+                                # tp_degree knob, the PlanDecider's
+                                # tp1/tp2/tp4 channel; unset = 1); N >= 1
+                                # pins it.  Degrees the host cannot
+                                # satisfy (device count, kv-head
+                                # divisibility) clamp down.
 
 
 def sample_rows(logits: jax.Array, key, temperature: float) -> jax.Array:
@@ -249,10 +262,16 @@ class Engine:
         self._build_step = None                     # plan -> compiled step
         self._slot_prefills: dict[int, Any] = {}    # feed_len -> jitted fn
         self._chunk_step = None                     # paged prefill-chunk fn
-        self._pool_steps: dict = {}                 # key -> (compiled, depth)
+        self._pool_steps: dict = {}                 # key -> (compiled, depth,
+                                                    #         tp)
         self._pool_step = None
         self._spec_depth = 0                        # depth of _pool_step
         self._pool_rc = None                        # counters of base step
+        # -- tensor-parallel serving state -----------------------------------
+        self._serve_tp = 1                          # current pages/params
+                                                    # placement degree
+        self._tp_meshes: dict = {}                  # tp -> host fallback mesh
+        self._tp_params: dict = {}                  # tp -> mesh-placed params
         self._load_bucket: Optional[int] = None
         self.decisions_log: list = []
 
@@ -280,8 +299,12 @@ class Engine:
 
     def _reset_tap_state(self):
         """Zero the per-trace measurement-tap accumulators and stats."""
-        self._tap_acc: dict = {}        # bucket -> [steps, tokens, secs]
+        self._tap_acc: dict = {}        # bucket -> [steps, tokens, secs,
+                                        #            prefix lookups, hits]
         self._tap_pending = 0           # taps since the last flush
+        self._tap_prefix_last = None    # (lookups, hits) at the last tap —
+                                        # pool counters are monotonic, the
+                                        # tap wants per-window deltas
         self._bucket_class: dict = {}   # bucket -> class in effect (tap attn
                                         # region), for reward attribution
         self._exploring = False         # current plan carries an explored class
@@ -441,6 +464,104 @@ class Engine:
             return self.cfg.prefix_cache == "on"
         return plan.config_for("layer0/attn").prefix_cache == "on"
 
+    def _tp_knob_live(self) -> bool:
+        """Whether tp_degree is the PlanDecider's to choose: only in auto
+        mode (ServeConfig.tp == 0) on the paged pool — the slot pool's
+        vmapped whole-cache step has no kv-head page axis to shard."""
+        return self._paged and self.cfg.tp == 0
+
+    def tp_for(self, plan: RegionPlan) -> int:
+        """tp-degree resolution (same precedence as the other serve knobs):
+        an explicit ServeConfig value pins it; in auto mode the plan's
+        attn-region tp_degree knob (the PlanDecider's tp1/tp2/tp4 channel)
+        decides; unset means 1 — exactly the pre-mesh single-device path.
+        The wanted degree then clamps DOWN to what this host + model can
+        satisfy: it must fit the device count and split the kv-head count
+        evenly (pages shard on the kv-head axis only; see
+        :func:`repro.kernels.paged_attention.shard_kv_heads`), so an
+        infeasible candidate class degrades gracefully instead of failing.
+        """
+        want = self.cfg.tp if self.cfg.tp > 0 else (
+            max(plan.config_for("layer0/attn").tp_degree, 0) or 1)
+        kvh = getattr(self.model.cfg, "n_kv_heads", 0) or 1
+        n_dev = len(jax.devices())
+        tp = max(int(want), 1)
+        while tp > 1 and (tp > n_dev or kvh % tp):
+            tp -= 1
+        from repro.kernels.paged_attention import shard_kv_heads
+        shard_kv_heads(kvh, tp)     # the centralised divisibility rule —
+        return tp                   # cannot raise after the clamp above
+
+    def _tp_mesh(self, tp: int):
+        """The ("data", "model") mesh a tp degree shards over: the
+        engine-level plan's mesh when its model axis already matches
+        (production: the launcher built the real device mesh), else a
+        host mesh over whatever devices exist (the ``--tp`` fallback —
+        e.g. CPU devices forced via
+        ``XLA_FLAGS=--xla_force_host_platform_device_count``)."""
+        m = self.plan.mesh
+        if m is not None and dict(m.shape).get("model") == tp:
+            return m
+        mesh = self._tp_meshes.get(tp)
+        if mesh is None:
+            from repro.launch.mesh import make_host_mesh
+            mesh = make_host_mesh(1, tp)
+            self._tp_meshes[tp] = mesh
+        return mesh
+
+    def _serve_plan(self, plan: RegionPlan, tp: int) -> RegionPlan:
+        """The plan a sharded serve step lowers under: the decided plan's
+        rules with the pool-layout axes pinned — pages shard on kv_heads
+        (never kv_seq: the host-side block table indexes page ids and
+        in-page positions identically on every shard, so the per-page
+        gather/DMA is unchanged and each shard just sees kv_heads/tp
+        heads), and q heads follow their GQA groups.  ff/vocab keep the
+        already-defined logical-axis rules, so MLP and unembed shard too;
+        the vocab-sharded logits replicate at the sampling boundary
+        (:meth:`_build_paged_step`'s single all-gather).  tp=1 returns the
+        plan untouched — bit-for-bit the single-device path."""
+        if tp <= 1:
+            return plan
+        rules = dict(plan.rules)
+        rules.update({"kv_seq": None, "kv_heads": "model", "heads": "model"})
+        return RegionPlan(mesh=self._tp_mesh(tp), rules=rules,
+                          region_configs=plan.region_configs)
+
+    @property
+    def _step_params(self):
+        """The params tree matching the current pool placement (mesh-sharded
+        copies are cached per degree; tp=1 is ``self.params`` itself)."""
+        return self._tp_params.get(self._serve_tp, self.params)
+
+    def _apply_tp(self, tp: int, pages_placed: bool = False):
+        """Move the pool pages + pick the params copy for a tp degree (no-op
+        when already there).  Runs on every step-cache *fetch*, not just on
+        builds: an AOT-compiled step is strict about its input shardings,
+        so a cached tp2 step must never be invoked with tp1-placed pages.
+        A switch costs one device_put of the pool — exactly the "one
+        reshard per tp change" the tp candidate docs promise — and
+        invalidates the chunk-prefill trace (it closes over the
+        placement)."""
+        tp = max(tp, 1)
+        if self._pool is None or tp == self._serve_tp:
+            return
+        pool = self._pool
+        splan = self._serve_plan(self.plan, tp)
+        if not pages_placed:
+            if tp == 1:
+                pool.pages = jax.device_put(pool.pages, jax.devices()[0])
+            else:
+                from repro.distributed.sharding import cache_shardings
+                pool.pages = jax.device_put(
+                    pool.pages, cache_shardings(splan, pool.pages))
+        if tp > 1 and tp not in self._tp_params:
+            from repro.distributed.sharding import param_shardings
+            self._tp_params[tp] = jax.device_put(
+                self.params, param_shardings(self.model, splan))
+        pool.tp_shards = tp
+        self._serve_tp = tp
+        self._chunk_step = None     # retraces under the new placement
+
     def _use_paged(self) -> bool:
         if self.cfg.paged == "off":
             return False
@@ -468,8 +589,18 @@ class Engine:
                 self.cfg.max_slots * max_pages + 1)
             avals = self.model.paged_cache_spec(n_pages, ps,
                                                dtype=self._param_dtype())
+            # mesh-aware pool construction: at tp > 1 every page leaf is
+            # built directly into its kv-head-sharded placement (no
+            # single-device materialisation then reshard)
+            tp = self.tp_for(self.plan)
+            shardings = None
+            if tp > 1:
+                from repro.distributed.sharding import cache_shardings
+                shardings = cache_shardings(self._serve_plan(self.plan, tp),
+                                            avals)
             self._pool = PagedKVPool(avals, self.cfg.max_slots, ps,
-                                     n_pages, max_pages)
+                                     n_pages, max_pages, shardings=shardings)
+            self._apply_tp(tp, pages_placed=True)
             from repro.serve.memory import MemoryGovernor, MemoryPolicy
             self.governor = MemoryGovernor(self._pool, MemoryPolicy(
                 reservation=self.reservation_for(self.plan),
@@ -481,9 +612,9 @@ class Engine:
             self._pool = SlotKVPool(self._slot_cache_avals(),
                                     self.cfg.max_slots)
             self._build_step = self._build_pool_step
-        self._pool_step, self._spec_depth = self._build_step(self.plan)
-        self._pool_steps[self._step_cache_key(self.plan)] = (
-            self._pool_step, self._spec_depth)
+        built = self._build_step(self.plan)
+        self._pool_step, self._spec_depth = built[0], built[1]
+        self._pool_steps[self._step_cache_key(self.plan)] = built
         if ((self.dtree is not None and self.cfg.autoplan)
                 or self.cfg.online_retrain):
             from repro.core import counters as counters_mod
@@ -508,8 +639,10 @@ class Engine:
 
     def _build_pool_step(self, plan: RegionPlan):
         """AOT-compile one decode+sample step over the whole slot pool.
-        Returns (compiled, spec_depth=0) — the slot pool (recurrent state /
-        rings) has no multi-token rollback, so it never speculates."""
+        Returns (compiled, spec_depth=0, tp=1) — the slot pool (recurrent
+        state / rings) has no multi-token rollback, so it never
+        speculates, and no page axis to shard, so it never tensor-
+        parallelises."""
         model, temp = self.model, self.cfg.temperature
         sample = self._sample_pool
 
@@ -524,7 +657,7 @@ class Engine:
         B = self._pool.n_slots
         return jax.jit(step, donate_argnums=(1,)).lower(
             self.params, self._pool.pool, jnp.zeros((B,), jnp.int32),
-            jnp.zeros((B,), jnp.bool_), jax.random.PRNGKey(0)).compile(), 0
+            jnp.zeros((B,), jnp.bool_), jax.random.PRNGKey(0)).compile(), 0, 1
 
     def _build_paged_step(self, plan: RegionPlan):
         """AOT-compile one decode(+verify)+sample step over the paged pool:
@@ -535,41 +668,85 @@ class Engine:
         followed by its drafted continuation, and the returned (B, S)
         token grid is the argmax chain the host's acceptance walk compares
         the drafts against.  D=0 degenerates to the plain one-token step.
-        Returns (compiled, D).
+
+        The plan's resolved tp degree shards the step over the mesh
+        "model" axis (:meth:`_serve_plan`): pages on kv_heads, params on
+        their logical axes, block tables / lengths / tokens replicated.
+        The vocab-sharded logits replicate right before sampling — the
+        step's single collective boundary — so the sampler and the host's
+        acceptance walk are shard-count-independent and greedy output is
+        bit-identical across degrees.  Returns (compiled, D, tp).
         """
         model, temp = self.model, self.cfg.temperature
         sample = self._sample_pool
         depth = self.spec_depth_for(plan)
         S = depth + 1
+        tp = self.tp_for(plan)
+        self._apply_tp(tp)          # lowering captures the live placement
+        splan = self._serve_plan(plan, tp)
+        mesh = splan.mesh if tp > 1 else None
 
         def step(params, pages, tokens, block_tables, lengths, active, key):
             logits, pages = model.paged_decode(
-                params, pages, tokens, block_tables, lengths, plan)
+                params, pages, tokens, block_tables, lengths, splan)
             B, S_, V = logits.shape
             flat = logits.astype(jnp.float32).reshape(B * S_, V)
+            if mesh is not None:
+                # THE collective boundary: replicate the vocab-sharded
+                # logits (one all-gather) before sampling, so everything
+                # downstream is shard-independent
+                flat = jax.lax.with_sharding_constraint(
+                    flat, NamedSharding(mesh, P()))
             act = jnp.repeat(active, S_)
             return sample(flat, act, key, temp).reshape(B, S_), pages
 
         pool = self._pool
         B, MP = pool.n_slots, pool.max_pages_per_slot
-        return jax.jit(step, donate_argnums=(1,)).lower(
-            self.params, pool.pages, jnp.zeros((B, S), jnp.int32),
-            jnp.zeros((B, MP), jnp.int32), jnp.zeros((B,), jnp.int32),
-            jnp.zeros((B,), jnp.bool_), jax.random.PRNGKey(0)).compile(), depth
+        args = [self._step_params, pool.pages,
+                jnp.zeros((B, S), jnp.int32), jnp.zeros((B, MP), jnp.int32),
+                jnp.zeros((B,), jnp.int32), jnp.zeros((B,), jnp.bool_),
+                jax.random.PRNGKey(0)]
+        if mesh is not None:
+            rep = NamedSharding(mesh, P())
+            args[2:] = [jax.device_put(a, rep) for a in args[2:]]
+        compiled = jax.jit(step, donate_argnums=(1,)).lower(*args).compile()
+        if mesh is None:
+            return compiled, depth, tp
+        rep = NamedSharding(mesh, P())
+
+        def call(params, pages, *rest):
+            # AOT executables are strict about input shardings: the serve
+            # loop's small host-built arrays must arrive replicated on the
+            # mesh, matching how the step was lowered above
+            return compiled(params, pages,
+                            *(jax.device_put(r, rep) for r in rest))
+        call.as_text = compiled.as_text         # counters.collect reads the
+        call.cost_analysis = compiled.cost_analysis     # HLO through these
+        return call, depth, tp
 
     def _chunk_fn(self):
         """Jitted paged prefill-chunk step (pages donated; the block-table
         row and base position are traced, so every slot and chunk index
         shares one executable per chunk width — jit's shape-keyed cache
-        handles the widths)."""
+        handles the widths).  At tp > 1 the output pages are pinned to the
+        pool's kv-head sharding: the chunk fn sits between AOT decode
+        steps whose input-sharding checks are strict, so GSPMD must never
+        drift the pages' placement.  A tp switch invalidates the trace
+        (:meth:`_apply_tp`)."""
         if self._chunk_step is None:
             model, plan = self.model, self.plan
+            out_sh = None
+            if self._serve_tp > 1:
+                from repro.distributed.sharding import cache_shardings
+                out_sh = cache_shardings(
+                    self._serve_plan(plan, self._serve_tp), self._pool.pages)
 
             def chunk_step(params, pages, tokens, bt_row, base):
                 return model.paged_prefill_chunk(params, pages, tokens,
                                                  bt_row, base, plan)
 
-            self._chunk_step = jax.jit(chunk_step, donate_argnums=(1,))
+            self._chunk_step = jax.jit(chunk_step, donate_argnums=(1,),
+                                       out_shardings=out_sh)
         return self._chunk_step
 
     def _prefill_slot(self, prompt: np.ndarray):
@@ -661,7 +838,11 @@ class Engine:
         key = self._step_cache_key(plan)
         if key not in self._pool_steps:
             self._pool_steps[key] = self._build_step(plan)
-        self._pool_step, self._spec_depth = self._pool_steps[key]
+        self._pool_step, self._spec_depth, step_tp = self._pool_steps[key]
+        # a cache HIT can still be a tp switch (the decider flipping back
+        # to a degree it compiled earlier): reshard the live pool/params
+        # to the placement the cached executable was lowered against
+        self._apply_tp(step_tp)
         self.decisions_log.append((n_active, decisions))
 
     # ------------------------------------------------------------------
@@ -680,19 +861,35 @@ class Engine:
         seg = "post" if st["swaps"] else "pre"
         st[seg + "_tokens"] += tokens
         st[seg + "_secs"] += dt_s
-        acc = self._tap_acc.setdefault(load_bucket(n_active), [0, 0, 0.0])
+        acc = self._tap_acc.setdefault(load_bucket(n_active),
+                                       [0, 0, 0.0, 0, 0])
         acc[0] += 1
         acc[1] += tokens
         acc[2] += dt_s
+        # prefix-cache hit-rate channel: per-window deltas of the pool's
+        # monotonic lookup/hit counters, attributed to this step's bucket
+        # so the decider can see mem_prefix_* classes EARNING their reward
+        if self._paged and self._pool is not None:
+            idx = self._pool.prefix
+            cur = (idx.lookups, idx.hits)
+            if self._tap_prefix_last is not None:
+                acc[3] += cur[0] - self._tap_prefix_last[0]
+                acc[4] += cur[1] - self._tap_prefix_last[1]
+            self._tap_prefix_last = cur
         self._tap_pending += 1
         if self._tap_pending >= max(self.cfg.retrain_interval, 1):
             self._tap_flush()
 
     def _append_bucket_obs(self, bucket: int, acc, cls: str):
-        """Append one bucket's accumulated window (``[steps, toks, secs]``)
-        to the corpus as a rewarded observation attributed to ``cls``."""
+        """Append one bucket's accumulated window (``[steps, toks, secs,
+        prefix_lookups, prefix_hits]``) to the corpus as a rewarded
+        observation attributed to ``cls``.  The window's prefix hit rate
+        rides along as a counter channel (decile-quantized so identical
+        windows still dedup), letting the tree split mem_prefix_* classes
+        on the hits that explain their tok/s, not just the tok/s."""
+        from repro.autotune.corpus import bucket_rate
         from repro.core.dtree import features
-        steps, toks, secs = acc
+        steps, toks, secs = acc[0], acc[1], acc[2]
         if self.corpus is None or steps == 0 or secs <= 0 or toks == 0:
             return
         region = self._tap_region
@@ -700,8 +897,12 @@ class Engine:
         if counters is None:
             return
         load_frac = min(bucket, self._pool.n_slots) / self._pool.n_slots
-        self.corpus.append(canonical(region),
-                           features(counters.scaled(load_frac)),
+        scaled = counters.scaled(load_frac)
+        lookups = acc[3] if len(acc) > 3 else 0
+        if lookups:
+            scaled = dataclasses.replace(
+                scaled, prefix_hit_rate=bucket_rate(acc[4] / lookups))
+        self.corpus.append(canonical(region), features(scaled),
                            cls, reward=toks / secs)
 
     def _tap_flush(self):
@@ -760,6 +961,12 @@ class Engine:
             rc.pop("prefix_cache", None)
             if not self._spec_knob_live():
                 rc.pop("spec_depth", None)
+            # the raw tp_degree knob is replaced by the RESOLVED degree
+            # below: tp4 clamped to 2 on a 2-device host must share the
+            # tp2 executable, not mint a third identical compile
+            rc.pop("tp_degree", None)
+        if self._paged:
+            raw["tp"] = self.tp_for(plan)
         return _json.dumps(raw, sort_keys=True)
 
     def _validate(self, req: Request):
@@ -991,6 +1198,24 @@ class Engine:
                 req = sched.peek_ready(t)
                 if req is None:
                     return
+                # duplicate-arrival dedup: a fresh request whose prompt
+                # matches one still mid-prefill is HELD (head-of-line, FIFO
+                # preserved) until the twin publishes its prefix pages —
+                # it then admits as a near-total prefix hit instead of
+                # double-prefilling the same prompt.  No deadlock: chunked
+                # prefill progresses every loop pass regardless of
+                # admission, and publication happens unconditionally at
+                # prefill completion.  Only with sharing on (a hold without
+                # a future hit would be pure added latency), and never for
+                # PREEMPTED re-entries (their history already diverged).
+                if (pool.prefix_enabled
+                        and req.state is RequestState.WAITING):
+                    pk = req.prompt_key()
+                    if any(r.prompt_key() == pk
+                           and np.array_equal(r.prompt, req.prompt)
+                           for r in sched.prefilling.values()):
+                        pool.dedup_holds += 1
+                        return
                 # a preempted request re-enters as recompute-prefill over
                 # prompt + generated-so-far; its worst case is unchanged
                 # (every recomputed token replaces a remaining new one)
@@ -1055,7 +1280,7 @@ class Engine:
                 if true_c < C:
                     chunk = np.pad(chunk, (0, C - true_c))
                 pool.pages = self._chunk_fn()(
-                    self.params, pool.pages,
+                    self._step_params, pool.pages,
                     jnp.asarray(chunk[None]),
                     jnp.asarray(pool.block_tables[slot]),
                     jnp.asarray(req.prefill_pos, jnp.int32))
@@ -1160,7 +1385,7 @@ class Engine:
                 bt_dev["act"] = jnp.asarray(eff)
                 bt_dev["dirty"] = False
             out, pool.pages = self._pool_step(
-                self.params, pool.pages, jnp.asarray(toks_in),
+                self._step_params, pool.pages, jnp.asarray(toks_in),
                 bt_dev["arr"], jnp.asarray(pool.lengths * eff),
                 bt_dev["act"], sub)
             steps += 1
@@ -1206,4 +1431,15 @@ class Engine:
                              committed_total - slot_steps,
                          "tokens_per_step":
                              committed_total / max(steps, 1)},
-                "memory": gov.summary()}
+                "memory": gov.summary(),
+                # mesh placement at trace end: page bytes are per DEVICE
+                # (pages shard on kv_heads, so each device holds 1/tp of
+                # every page); page/watermark COUNTS are tp-invariant
+                "mesh": {
+                    "tp": pool.tp_shards,
+                    "devices": len(jax.devices()),
+                    "page_bytes_per_device": pool.per_device_page_bytes(),
+                    "hbm_bytes_per_device": pool.per_device_hbm_bytes(),
+                    "high_water_bytes_per_device":
+                        pool.per_device_high_water_bytes(),
+                }}

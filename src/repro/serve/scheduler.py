@@ -33,6 +33,7 @@ from __future__ import annotations
 
 import dataclasses
 import enum
+import hashlib
 from collections import deque
 from typing import Optional, Sequence
 
@@ -69,6 +70,16 @@ class Request:
     prefix_hit_tokens: int = 0          # history tokens adopted from the
                                         # prefix cache instead of prefilled
                                         # (summed over re-admissions)
+    _prompt_key: Optional[str] = dataclasses.field(default=None, repr=False)
+
+    def prompt_key(self) -> str:
+        """Stable digest of the prompt tokens, for duplicate-arrival dedup
+        (admission holds a WAITING twin until the in-flight copy publishes
+        its prefix).  Cached: prompts are immutable after __post_init__."""
+        if self._prompt_key is None:
+            self._prompt_key = hashlib.sha1(
+                np.ascontiguousarray(self.prompt).tobytes()).hexdigest()
+        return self._prompt_key
 
     def __post_init__(self):
         self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)

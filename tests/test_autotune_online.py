@@ -274,6 +274,8 @@ def test_explorer_budget_caps_exploration():
             assert rc.reservation == "full"
         elif cls.startswith("mem_prefix"):
             assert rc.prefix_cache == cls.rsplit("_", 1)[-1]
+        elif cls.startswith("tp"):
+            assert rc.tp_degree == int(cls[2:])
         else:
             assert cls.startswith("mem_lazy") and rc.reservation == "lazy"
 
@@ -283,7 +285,8 @@ def test_explorer_menu_is_the_serve_only_classes():
     assert {c.name for c in explore_menu()} == {
         "spec0", "spec2", "spec4",
         "mem_full", "mem_lazy", "mem_lazy_wm10", "mem_lazy_wm30",
-        "mem_prefix_on", "mem_prefix_off"}
+        "mem_prefix_on", "mem_prefix_off",
+        "tp1", "tp2", "tp4"}
     assert all(c.serve_only for c in explore_menu())
     # the watermark variants carry their fraction on the config
     wm = {c.name: c.config.mem_watermark for c in explore_menu()

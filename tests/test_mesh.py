@@ -1,0 +1,77 @@
+"""make_host_mesh shape resolution — in particular that a requested
+``model`` (tensor-parallel) degree is honored whenever the host's device
+count can satisfy it, rather than being clamped through the ``n // data``
+integer-division order (the bug the tp serving path tripped over).
+
+The forced-device cases run in a subprocess: ``XLA_FLAGS`` must be set
+before jax initialises its backend, and the test process has already
+initialised a single-device CPU backend.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+
+from repro.launch.mesh import make_host_mesh
+
+_CHILD = r"""
+import json, os, jax
+from repro.launch.mesh import make_host_mesh
+out = []
+for data, model in [(1, 1), (1, 2), (2, 2), (1, 4), (2, 4), (3, 2), (4, 2),
+                    (1, 8), (8, 8)]:
+    m = make_host_mesh(data, model)
+    out.append([data, model, dict(m.shape)["data"], dict(m.shape)["model"]])
+print(json.dumps({"n_devices": len(jax.devices()), "shapes": out}))
+"""
+
+
+def _run_forced(n_devices: int) -> dict:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["JAX_PLATFORMS"] = "cpu"
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env["PYTHONPATH"] = os.path.join(root, "src")
+    res = subprocess.run([sys.executable, "-c", _CHILD], env=env,
+                         capture_output=True, text=True, timeout=300)
+    assert res.returncode == 0, res.stderr
+    return json.loads(res.stdout.strip().splitlines()[-1])
+
+
+def test_host_mesh_single_device_clamps_everything_to_one():
+    m = make_host_mesh(4, 4)
+    shape = dict(m.shape)
+    if len(jax.devices()) == 1:
+        assert shape == {"data": 1, "model": 1}
+    assert shape["data"] * shape["model"] <= len(jax.devices())
+
+
+def test_host_mesh_honors_model_degree_on_forced_devices():
+    out = _run_forced(4)
+    assert out["n_devices"] == 4
+    got = {(d, m): (gd, gm) for d, m, gd, gm in out["shapes"]}
+    # the tp degrees the host can satisfy are granted verbatim
+    assert got[(1, 2)] == (1, 2)
+    assert got[(1, 4)] == (1, 4)
+    assert got[(2, 2)] == (2, 2)
+    # model wins the leftover-device split: data gives way, never model
+    # (the old clamp order returned (3, 1) and (4, 1) here)
+    assert got[(3, 2)] == (2, 2)
+    assert got[(4, 2)] == (2, 2)
+    # degrees beyond the device count clamp to it
+    assert got[(1, 8)] == (1, 4)
+    assert got[(2, 4)] == (1, 4)
+    assert got[(8, 8)] == (1, 4)
+
+
+def test_host_mesh_model_first_on_two_forced_devices():
+    out = _run_forced(2)
+    assert out["n_devices"] == 2
+    got = {(d, m): (gd, gm) for d, m, gd, gm in out["shapes"]}
+    # the regression case: (2, 2) on 2 devices must yield model=2, not
+    # data=2 (clamping data first funnelled model through 2 // 2 = 1)
+    assert got[(2, 2)] == (1, 2)
+    assert got[(1, 2)] == (1, 2)
+    assert got[(4, 2)] == (1, 2)

@@ -120,3 +120,99 @@ def test_bucketed_decisions_follow_occupancy_over_a_trace():
         picked[b] = dict(decisions)["layer/attn"]
     assert picked[1] == "spec4" and picked[2] == "spec4"
     assert picked[8] == "spec2"
+
+
+# ---------------------------------------------------------------------------
+# tp_degree: decider channel + engine-side resolution/clamping
+# ---------------------------------------------------------------------------
+
+
+def _tp_tree():
+    """Low occupancy -> tp1 (latency/collective-bound decode), high
+    occupancy -> tp4 (flops-bound prefill wants the model axis wide)."""
+    base = Counters(flops=8e9, bytes=2e9)
+    X, y = [], []
+    for frac, label in ((0.125, "tp1"), (0.25, "tp1"),
+                        (0.5, "tp4"), (1.0, "tp4")):
+        X.append(features(base.scaled(frac)))
+        y.append(label)
+    return DecisionTree(max_depth=3).fit(np.stack(X), y), base
+
+
+def test_occupancy_scaling_switches_tp_degree_decision():
+    """The tp1/tp2/tp4 serve candidates are a decider channel like spec_*:
+    the same measured step lands a different tp_degree on the plan purely
+    through the load_frac scaling."""
+    tree, base = _tp_tree()
+    rc = _RC({"layer0/attn": base})
+    dec = PlanDecider(tree, kind="decode")
+    low, dlow = dec.decide(rc, null_plan(), load_frac=0.25)
+    high, dhigh = dec.decide(rc, null_plan(), load_frac=1.0)
+    assert dict(dlow)["layer/attn"] == "tp1"
+    assert dict(dhigh)["layer/attn"] == "tp4"
+    assert low.config_for("layer3/attn").tp_degree == 1
+    assert high.config_for("layer3/attn").tp_degree == 4
+
+
+def _stub_engine(tp_pin=0, n_kv_heads=4, paged=True):
+    """An Engine shell exercising tp_for/_step_cache_key resolution logic
+    without a model: only the attributes those methods read are present."""
+    from types import SimpleNamespace
+
+    from repro.serve.engine import Engine, ServeConfig
+    eng = object.__new__(Engine)
+    eng.cfg = ServeConfig(tp=tp_pin)
+    eng.model = SimpleNamespace(cfg=SimpleNamespace(
+        n_kv_heads=n_kv_heads, n_experts=0))
+    eng._paged = paged
+    return eng
+
+
+def _plan_with_tp(tp_degree):
+    from repro.core.policy import RegionConfig
+    plan = null_plan()
+    plan.region_configs["layer/attn"] = RegionConfig(tp_degree=tp_degree)
+    return plan
+
+
+def test_tp_for_resolution_precedence_and_clamping(monkeypatch):
+    import jax
+    monkeypatch.setattr(jax, "devices", lambda: [None] * 4)
+    # plan knob decides in auto mode; unset means 1
+    assert _stub_engine().tp_for(_plan_with_tp(2)) == 2
+    assert _stub_engine().tp_for(null_plan()) == 1
+    # an explicit ServeConfig.tp pins over the plan knob
+    assert _stub_engine(tp_pin=4).tp_for(_plan_with_tp(1)) == 4
+    # device-count clamp: tp4 on a 2-device host degrades to 2
+    monkeypatch.setattr(jax, "devices", lambda: [None] * 2)
+    assert _stub_engine().tp_for(_plan_with_tp(4)) == 2
+    # kv-head divisibility clamp: 6 heads cannot split 4 ways, can 3
+    monkeypatch.setattr(jax, "devices", lambda: [None] * 4)
+    assert _stub_engine(n_kv_heads=6).tp_for(_plan_with_tp(4)) == 3
+    # single device: everything is tp1
+    monkeypatch.setattr(jax, "devices", lambda: [None] * 1)
+    assert _stub_engine(tp_pin=4).tp_for(_plan_with_tp(4)) == 1
+
+
+def test_step_cache_keys_on_resolved_tp_and_nothing_else(monkeypatch):
+    """A tp change forces the expected recompile; allocator-policy knobs
+    and clamped-identical degrees never do."""
+    import jax
+    monkeypatch.setattr(jax, "devices", lambda: [None] * 2)
+    from repro.core.policy import RegionConfig
+    eng = _stub_engine()
+
+    def plan_of(**kw):
+        p = null_plan()
+        p.region_configs["layer/attn"] = RegionConfig(**kw)
+        return p
+
+    k1 = eng._step_cache_key(plan_of(tp_degree=1))
+    k2 = eng._step_cache_key(plan_of(tp_degree=2))
+    assert k1 != k2                               # tp change -> new step
+    # tp4 clamps to 2 on this 2-device host: shares the tp2 executable
+    assert eng._step_cache_key(plan_of(tp_degree=4)) == k2
+    # memory-policy knobs never reshape the step
+    assert eng._step_cache_key(
+        plan_of(tp_degree=2, reservation="lazy", mem_watermark=0.3,
+                prefix_cache="on")) == k2
