@@ -138,6 +138,23 @@ GENS_TP = [12, 8, 10, 8]
 PAGE_TP = 8
 SLOTS_TP = 3
 
+# -- chaos section (fault-injected serving: retries, fallback, shedding) -----
+PROMPT_CH = 12
+GENS_CH = [10, 8, 12, 8, 10, 8, 10, 8, 12]   # 9-request burst: 3 admitted,
+                                             # the rest queue (shed targets)
+PAGE_CH = 8
+SLOTS_CH = 3
+KV_PAGES_CH = 14               # 13 allocatable: room for ~3 worst-case
+                               # residents, so injected alloc/grow faults
+                               # land on a pool that is actually contended
+CHAOS_RATE = 0.1
+CHAOS_SEED = 7
+DEADLINE_CH = 2e-4             # rid 3 (first waiting request) expires at the
+                               # first shed check after admission fills the
+                               # 3 slots — decode rounds take >> 0.2 ms
+MAX_QUEUE_CH = 3               # bounds the post-admission backlog: the 2
+                               # newest arrivals shed as REJECTED
+
 
 def _trace(vocab: int, n_req: int = N_REQ) -> list[Request]:
     rng = np.random.default_rng(0)
@@ -539,6 +556,114 @@ def _tp_section(model, params, vocab: int) -> tuple[list, dict]:
     return rows, sec
 
 
+def _chaos_section(model, params, vocab: int) -> tuple[list, dict]:
+    """Fault-injected serving vs the identical fault-free trace (the
+    robustness headline): a chaos engine at ``--chaos-rate 0.1`` replays a
+    9-request burst through a contended lazy pool with speculation and
+    prefix caching on, while the injector fires NaN logits, allocator
+    exhaustion, growth denials and latency spikes.  Gates (CI's
+    ``chaos-smoke`` job): every surviving request's greedy tokens are
+    bit-identical to the fault-free run, the allocator leaks zero pages,
+    at least one retry and one safe-plan fallback actually happened,
+    ``faults_injected >= 3``, the deadline/queue shed paths each fire, and
+    ``serve()`` returns a failure summary instead of raising.  Fault
+    schedule and shed outcomes are seed-deterministic (burst arrivals,
+    per-site RNG streams), so the gate is immune to wall-clock jitter."""
+    rng = np.random.default_rng(23)
+    prompts = rng.integers(0, vocab, (len(GENS_CH), PROMPT_CH)).astype(
+        np.int32)
+
+    def mk(chaos: bool):
+        reqs = [Request(rid=i, prompt=prompts[i].copy(), max_new_tokens=g)
+                for i, g in enumerate(GENS_CH)]
+        if chaos:
+            # rid 3 is the first request left WAITING after the 3 slots
+            # fill; a sub-ms admission deadline guarantees it sheds
+            reqs[3].deadline_s = DEADLINE_CH
+        return reqs
+
+    common = dict(max_len=PROMPT_CH + max(GENS_CH) + 1, max_slots=SLOTS_CH,
+                  page_size=PAGE_CH, prefill_chunk=PAGE_CH, spec_depth=2,
+                  kv_pages=KV_PAGES_CH, reservation="lazy",
+                  mem_watermark=0.0, prefix_cache="on")
+    base_eng = Engine(model, params, serve_cfg=ServeConfig(**common))
+    base_eng.serve(mk(False))              # warm: compile spec + safe steps
+    base_reqs = mk(False)
+    res_b = base_eng.serve(base_reqs)
+    assert res_b["stats"]["n_done"] == len(GENS_CH), (
+        "fault-free baseline failed to complete the trace")
+
+    chaos_eng = Engine(model, params, serve_cfg=ServeConfig(
+        **common, chaos_rate=CHAOS_RATE, chaos_seed=CHAOS_SEED,
+        max_queue=MAX_QUEUE_CH))
+    # warm with the injector detached so compiles never land inside the
+    # measured chaos run (and the fault schedule stays exactly the seeded
+    # one — no draws are spent warming); the safe-plan step is prewarmed
+    # the same way the engine itself would fetch it
+    inj = chaos_eng.faults
+    chaos_eng.faults = None
+    chaos_eng.serve(mk(False))
+    chaos_eng._enter_fallback()
+    chaos_eng._exit_fallback()
+    chaos_eng.faults = inj
+    chaos_eng._pool.faults = inj
+    chaos_eng.governor.faults = inj
+    chaos_reqs = mk(True)
+    res_c = chaos_eng.serve(chaos_reqs)    # must return, never raise
+
+    survivors = [r for r in chaos_reqs if r.state.value == "done"]
+    for r in survivors:
+        assert r.out_tokens == base_reqs[r.rid].out_tokens, (
+            f"chaos changed surviving request {r.rid}'s tokens")
+    fl, hs, fi = res_c["failures"], res_c["health"], res_c["faults"]
+    leaks = res_c["page_leaks"]
+    assert leaks == 0, f"chaos run leaked {leaks} pages"
+    assert fi["injected_total"] >= 3, "injector barely fired — dead section"
+    assert fl["retries"] >= 1, "no transient fault was ever retried"
+    assert hs["fallbacks"] >= 1, "safe-plan fallback never engaged"
+    assert fl["expired"] >= 1, "deadline shed never fired"
+    assert fl["rejected"] >= 1, "queue-bound shed never fired"
+
+    sc, sb = res_c["stats"], res_b["stats"]
+    p99_ratio = sc["latency_p99_s"] / max(sb["latency_p99_s"], 1e-9)
+    inj = "+".join(f"{k.replace('.', '_')}={v}" for k, v in
+                   sorted(fi["injected"].items()))
+    rows = [
+        (f"serve_chaos_injected,{fi['injected_total']},"
+         f"{inj or 'none'}"),
+        (f"serve_chaos_outcomes,{len(survivors)},"
+         f"failed={fl['failed']}_expired={fl['expired']}"
+         f"_rejected={fl['rejected']}_retries={fl['retries']}"),
+        (f"serve_chaos_health,{hs['fault_steps']},"
+         f"state={hs['state']}_fallbacks={hs['fallbacks']}"
+         f"_shed_entries={hs['shed_entries']}"),
+        f"serve_chaos_page_leaks,{leaks},gate==0",
+        f"serve_chaos_bit_identical,1,survivors={len(survivors)}",
+        f"serve_chaos_p99_ratio,{p99_ratio:.2f},chaos_vs_fault_free",
+    ]
+    sec = {
+        "kv_pages": KV_PAGES_CH, "page_size": PAGE_CH, "slots": SLOTS_CH,
+        "submitted": len(GENS_CH), "chaos_rate": CHAOS_RATE,
+        "chaos_seed": CHAOS_SEED,
+        "survivors_bit_identical": True,   # asserted above
+        "page_leaks": leaks,
+        "faults_injected": fi["injected_total"],
+        "injected": fi["injected"],
+        "done": len(survivors),
+        "failed": fl["failed"], "expired": fl["expired"],
+        "rejected": fl["rejected"], "retries": fl["retries"],
+        "errors": {str(k): v for k, v in fl["errors"].items()},
+        "health": hs,
+        "p99_ratio": p99_ratio,
+        "baseline": {"tok_per_s": sb["tok_per_s"],
+                     "latency_p99_s": sb["latency_p99_s"]},
+        "chaos": {"tok_per_s": sc["tok_per_s"],
+                  "latency_p99_s": sc["latency_p99_s"],
+                  "steps": res_c["steps"]},
+    }
+    return rows, sec
+
+
 def _best_of(engine: Engine, base: list[Request], n: int = 2):
     """Serve the identical trace ``n`` times and keep the fastest run —
     wall-clock serving of sub-30ms steps is noisy on shared CPU, and the
@@ -553,7 +678,8 @@ def _best_of(engine: Engine, base: list[Request], n: int = 2):
 
 
 def run(smoke: bool = False, overcommit_only: bool = False,
-        prefix_only: bool = False, tp_only: bool = False):
+        prefix_only: bool = False, tp_only: bool = False,
+        chaos: bool = False, chaos_only: bool = False):
     global json_summary
     # smoke keeps the same 8-request trace (the CI guard gates on ratios
     # that need the full concurrency of the mixed-length trace) but takes
@@ -588,6 +714,18 @@ def run(smoke: bool = False, overcommit_only: bool = False,
             "ratios": {"prefix_hit_ttft_speedup":
                        pf_sec["cold"]["ttft_p50_s"]
                        / max(pf_sec["warm"]["ttft_p50_s"], 1e-9)},
+        }
+        return
+    if chaos_only:
+        # the focused fault-injection gate (CI's chaos-smoke job): chaos
+        # vs fault-free bit-identity, leak audit, retry/fallback/shed
+        # coverage — nothing else
+        ch_rows, ch_sec = _chaos_section(model, params, cfg.vocab_size)
+        yield from ch_rows
+        json_summary = {
+            "arch": ARCH, "smoke": smoke, "chaos_only": True,
+            "chaos": ch_sec,
+            "ratios": {"chaos_p99_vs_fault_free": ch_sec["p99_ratio"]},
         }
         return
     if tp_only:
@@ -756,6 +894,12 @@ def run(smoke: bool = False, overcommit_only: bool = False,
     tp_rows, tp_sec = _tp_section(model, params, cfg.vocab_size)
     yield from tp_rows
 
+    # -- fault-injected serving (opt-in: --chaos; CI runs --chaos-only)
+    ch_sec = None
+    if chaos:
+        ch_rows, ch_sec = _chaos_section(model, params, cfg.vocab_size)
+        yield from ch_rows
+
     mem_p = res_p.get("memory", {})
     json_summary = {
         "arch": ARCH, "slots": SLOTS, "page_size": PAGE,
@@ -848,6 +992,10 @@ def run(smoke: bool = False, overcommit_only: bool = False,
     if "per_device_high_water_ratio" in tp_sec:
         json_summary["ratios"]["tp2_per_device_high_water"] = (
             tp_sec["per_device_high_water_ratio"])
+    if ch_sec is not None:
+        json_summary["chaos"] = ch_sec
+        json_summary["ratios"]["chaos_p99_vs_fault_free"] = (
+            ch_sec["p99_ratio"])
 
 
 def write_json(path: str = "BENCH_serve.json") -> None:
@@ -861,12 +1009,15 @@ if __name__ == "__main__":
     oc_only = "--overcommit-only" in sys.argv
     pf_only = "--prefix-only" in sys.argv
     tp_only = "--tp-only" in sys.argv
+    ch_only = "--chaos-only" in sys.argv
+    ch = "--chaos" in sys.argv
     for row in run(smoke=smoke, overcommit_only=oc_only,
-                   prefix_only=pf_only, tp_only=tp_only):
+                   prefix_only=pf_only, tp_only=tp_only,
+                   chaos=ch, chaos_only=ch_only):
         print(row)
     write_json()
     print(f"# wrote BENCH_serve.json (smoke={smoke} "
           f"overcommit_only={oc_only} prefix_only={pf_only} "
-          f"tp_only={tp_only})")
-    if smoke and not oc_only and not pf_only and not tp_only:
+          f"tp_only={tp_only} chaos_only={ch_only})")
+    if smoke and not oc_only and not pf_only and not tp_only and not ch_only:
         assert json_summary["paged"]["tok_per_s"] > 0, "smoke run produced 0 tok/s"

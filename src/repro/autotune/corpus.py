@@ -19,6 +19,8 @@ from __future__ import annotations
 import dataclasses
 import json
 import math
+import os
+import tempfile
 from typing import Iterable, Sequence, Tuple
 
 import numpy as np
@@ -105,6 +107,7 @@ class Corpus:
     def __init__(self):
         self._entries: dict = {}    # key -> CorpusEntry (insertion-ordered)
         self.observations = 0       # raw appends, pre-dedup (retrain trigger)
+        self.quarantined = 0        # malformed JSONL lines skipped at load
 
     # -- append / dedup ------------------------------------------------------
     def append(self, region: str, features, chosen_class: str,
@@ -187,18 +190,47 @@ class Corpus:
         return (np.stack(X) if X else np.empty((0, 0))), y
 
     # -- persistence ---------------------------------------------------------
-    def save_jsonl(self, path: str) -> int:
-        with open(path, "w") as f:
-            for e in self._entries.values():
-                f.write(json.dumps(e.to_json()) + "\n")
+    def save_jsonl(self, path: str, faults=None) -> int:
+        """Write the corpus atomically: a tempfile in the target directory
+        then ``os.replace``, so a crash (or injected fault) mid-save can
+        never destroy the previously learned corpus — the old file stays
+        intact until the new one is fully on disk.  ``faults`` is an
+        optional :class:`repro.serve.faults.FaultInjector`; its
+        ``corpus.corrupt`` site mangles individual lines to exercise the
+        load-side quarantine."""
+        path = os.path.abspath(path)
+        fd, tmp = tempfile.mkstemp(
+            dir=os.path.dirname(path), prefix=".corpus-", suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                for e in self._entries.values():
+                    line = json.dumps(e.to_json())
+                    if faults is not None and faults.fire("corpus.corrupt"):
+                        line = faults.corrupt_line(line)
+                    f.write(line + "\n")
+            os.replace(tmp, path)
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
         return len(self._entries)
 
     @classmethod
     def load_jsonl(cls, path: str) -> "Corpus":
+        """Load, skipping (and counting in the ``quarantined`` tap) any
+        malformed line — one corrupt line must not cost the whole learned
+        corpus.  Catches JSON decode errors plus the shape errors
+        ``CorpusEntry.from_json`` raises on well-formed-but-wrong JSON."""
         c = cls()
         with open(path) as f:
             for line in f:
                 line = line.strip()
-                if line:
+                if not line:
+                    continue
+                try:
                     c._absorb(CorpusEntry.from_json(json.loads(line)))
+                except (ValueError, KeyError, TypeError, AttributeError):
+                    c.quarantined += 1
         return c

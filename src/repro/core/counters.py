@@ -92,17 +92,24 @@ class Counters:
                                     # prefix-cache hits/lookups observed over
                                     # the tap window, so the decider can see
                                     # why mem_prefix_* classes earn reward
+    fault_rate: float = 0.0         # serve-side channel (not from HLO):
+                                    # HealthMonitor faulted-step fraction
+                                    # over the tap window, so the decider
+                                    # can learn degradation responses from
+                                    # the corpus like any other knob
 
     def scaled(self, mult: float) -> "Counters":
         """A copy with flops/bytes terms scaled (e.g. by pool occupancy:
         the serve-time decider attributes a fixed-shape step's measured
         counters to the fraction of slots doing useful work).  Rates
-        (prefix_hit_rate) are occupancy-invariant and copied through."""
+        (prefix_hit_rate, fault_rate) are occupancy-invariant and copied
+        through."""
         return Counters(flops=self.flops * mult, bytes=self.bytes * mult,
                         collective_bytes=self.collective_bytes * mult,
                         link_bytes=self.link_bytes * mult,
                         collective_ops=self.collective_ops, ops=self.ops,
-                        prefix_hit_rate=self.prefix_hit_rate)
+                        prefix_hit_rate=self.prefix_hit_rate,
+                        fault_rate=self.fault_rate)
 
     def add(self, other: "Counters", mult: float = 1.0,
             skip_bytes: bool = False):

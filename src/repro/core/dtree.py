@@ -22,7 +22,7 @@ import numpy as np
 FEATURE_NAMES = (
     "log_flops", "log_bytes", "log_collective_bytes", "log_link_bytes",
     "arithmetic_intensity", "collective_fraction", "ops",
-    "prefix_hit_rate",
+    "prefix_hit_rate", "fault_rate",
 )
 
 
@@ -41,6 +41,7 @@ def features(c) -> np.ndarray:
         np.log10(c.collective_bytes + eps), np.log10(c.link_bytes + eps),
         ai, coll_frac, float(c.ops),
         float(getattr(c, "prefix_hit_rate", 0.0)),
+        float(getattr(c, "fault_rate", 0.0)),
     ])
 
 

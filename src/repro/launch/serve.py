@@ -21,6 +21,7 @@ exploitation, keeping greedy output bit-identical).
 from __future__ import annotations
 
 import argparse
+import sys
 import time
 
 import jax
@@ -214,6 +215,22 @@ def main(argv=None):
     ap.add_argument("--tree-out", default="",
                     help="write the final (possibly online-retrained) "
                          "decision tree JSON after serving")
+    ap.add_argument("--deadline-s", type=float, default=0.0,
+                    help="default time-to-admission deadline per request: "
+                         "a request still WAITING this many seconds after "
+                         "its arrival is shed as EXPIRED instead of served "
+                         "(0 = no deadline; per-request Request.deadline_s "
+                         "overrides)")
+    ap.add_argument("--max-queue", type=int, default=0,
+                    help="bound on the post-admission waiting queue: "
+                         "arrived requests beyond this many are shed as "
+                         "REJECTED (0 = unbounded)")
+    ap.add_argument("--chaos-rate", type=float, default=0.0,
+                    help="fault-injection Bernoulli rate per site draw "
+                         "(0 = chaos off, injector never constructed)")
+    ap.add_argument("--chaos-seed", type=int, default=0,
+                    help="fault-injection seed (per-site independent "
+                         "streams; same seed+rate = same fault schedule)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -241,7 +258,9 @@ def main(argv=None):
         online_retrain=args.online_retrain,
         retrain_interval=args.retrain_interval,
         explore_eps=0.0 if args.no_explore else args.explore_eps,
-        explore_budget=args.explore_budget),
+        explore_budget=args.explore_budget,
+        deadline_s=args.deadline_s, max_queue=args.max_queue,
+        chaos_rate=args.chaos_rate, chaos_seed=args.chaos_seed),
         dtree=dtree)
     if (args.corpus_in or args.corpus_out) and engine.corpus is None:
         print("[autotune] warning: --corpus-in/--corpus-out need "
@@ -260,14 +279,30 @@ def main(argv=None):
                 f"{r}->{c}" for r, c in decisions))
 
     for r in reqs:
+        tail = (f"latency {(r.t_done - r.arrival_s)*1e3:7.1f} ms"
+                if r.state.value == "done" else
+                f"{r.state.value}" + (f" ({r.error})" if r.error else ""))
         print(f"req {r.rid:3d} arrive {r.arrival_s*1e3:7.1f} ms  "
-              f"gen {len(r.out_tokens):3d} tok  "
-              f"latency {(r.t_done - r.arrival_s)*1e3:7.1f} ms")
+              f"gen {len(r.out_tokens):3d} tok  " + tail)
     s = res["stats"]
     print(f"{args.mode}: {s['n_done']} requests, {s['tokens']} tokens in "
           f"{s['wall_s']:.2f} s -> {s['tok_per_s']:.1f} tok/s  "
           f"p50 {s['latency_p50_s']*1e3:.0f} ms  "
           f"p99 {s['latency_p99_s']*1e3:.0f} ms")
+    fl = res.get("failures", {})
+    if any(fl.get(k, 0) for k in ("failed", "expired", "rejected", "retries")):
+        hs = res.get("health", {})
+        print(f"[failures] failed={fl['failed']} expired={fl['expired']} "
+              f"rejected={fl['rejected']} retries={fl['retries']} "
+              f"health={hs.get('state', 'n/a')} "
+              f"fallbacks={hs.get('fallbacks', 0)}")
+    fi = res.get("faults", {})
+    if fi.get("enabled"):
+        inj = " ".join(f"{k}={v}" for k, v in
+                       sorted(fi.get("injected", {}).items()))
+        print(f"[chaos] seed={fi['seed']} rate={fi['rate']} "
+              f"injected_total={fi['injected_total']}" +
+              (f"  ({inj})" if inj else ""))
     if args.mode == "continuous" and engine._paged:
         pool = engine._pool
         mesh_info = res.get("mesh", {})
@@ -332,5 +367,27 @@ def main(argv=None):
     return res
 
 
+def cli(argv=None) -> int:
+    """Process entry point with failure-aware exit codes.
+
+    0 = every request completed; 1 = served but some requests ended in a
+    non-DONE terminal state (failed / expired / rejected); 2 = the engine
+    itself aborted (an exception escaped ``serve()`` — per-request faults
+    never do, so this means a crashed step or a programmer error)."""
+    try:
+        res = main(argv)
+    except Exception as e:  # engine abort, not per-request failure
+        print(f"[fatal] {type(e).__name__}: {e}", file=sys.stderr)
+        return 2
+    fl = (res or {}).get("failures", {})
+    bad = sum(fl.get(k, 0) for k in ("failed", "expired", "rejected"))
+    if bad:
+        print(f"[exit] {bad} request(s) not served "
+              f"(failed={fl.get('failed', 0)} expired={fl.get('expired', 0)} "
+              f"rejected={fl.get('rejected', 0)})", file=sys.stderr)
+        return 1
+    return 0
+
+
 if __name__ == "__main__":
-    main()
+    sys.exit(cli())

@@ -492,6 +492,9 @@ class PagedKVPool:
         self.dedup_holds = 0                # admissions held for an identical
                                             # in-flight prompt to publish
         self._cow_fn = None                 # lazily-jitted device page copy
+        # optional FaultInjector (serve/faults.py), threaded in by the
+        # engine; None = zero-overhead production path
+        self.faults = None
 
     # -- slot accounting -----------------------------------------------------
     @property
@@ -529,6 +532,8 @@ class PagedKVPool:
         when no slot or still not enough pages."""
         if n_fresh < 0:
             raise ValueError("n_fresh must be >= 0")
+        if self.faults is not None and self.faults.fire("alloc.exhaust"):
+            return None                 # injected: free list reads as dry
         shared = [int(p) for p in shared_pages]
         if (not self._free_slots
                 or n_fresh + len(shared) > self.max_pages_per_slot):
@@ -555,6 +560,8 @@ class PagedKVPool:
         full — the governor then evicts a victim or stalls the slot."""
         if slot not in self._active:
             raise ValueError(f"slot {slot} is not active")
+        if self.faults is not None and self.faults.fire("alloc.exhaust"):
+            return False                # injected: free list reads as dry
         held = self.allocator.n_held(slot)
         if held >= self.max_pages_per_slot:
             return False
@@ -590,6 +597,17 @@ class PagedKVPool:
         reclaimed = self.release(slot)
         self.n_preempts += 1
         return len(reclaimed)
+
+    def leaked_pages(self) -> int:
+        """Live pages reachable from neither an active slot nor the prefix
+        index — stranded references left by a buggy fault path.  Zero on a
+        healthy pool; the engine audits this at serve end and after any
+        aborted serve (on top of ``allocator.check_invariants``, which
+        already guarantees refcounts match owners)."""
+        reachable: set[int] = set(self.allocator.pages_of(_PREFIX_OWNER))
+        for slot in self._active:
+            reachable.update(self.allocator.pages_of(slot))
+        return self.allocator.n_live - len(reachable)
 
     def advance(self, slot: int, n_tokens: int) -> None:
         """Record ``n_tokens`` newly covered tokens for ``slot`` — rows

@@ -106,7 +106,10 @@ from repro.autotune.decider import PlanDecider  # noqa: F401  (re-export:
                                                 # moved to repro.autotune)
 from repro.core.policy import RegionConfig, RegionPlan, null_plan
 from repro.models.model import Model
-from repro.serve.scheduler import Request, RequestState, Scheduler, summarize
+from repro.serve.faults import FaultInjector
+from repro.serve.health import HealthMonitor, HealthPolicy
+from repro.serve.scheduler import (Request, RequestState, Scheduler,
+                                   summarize)
 
 
 @dataclasses.dataclass
@@ -175,6 +178,28 @@ class ServeConfig:
                                 # pins it.  Degrees the host cannot
                                 # satisfy (device count, kv-head
                                 # divisibility) clamp down.
+    # -- failure domains + graceful degradation (serve/{faults,health}.py) ---
+    deadline_s: float = 0.0     # default time-to-admission budget for
+                                # requests that don't set their own
+                                # Request.deadline_s (0 = no deadline);
+                                # expired waiters shed with EXPIRED
+    max_queue: int = 0          # bound on the arrived-but-waiting queue;
+                                # arrivals beyond it shed with REJECTED
+                                # (0 = unbounded)
+    max_retries: int = 3        # consecutive faulted steps a request may
+                                # retry before the engine fails it and
+                                # releases all its pages
+    watchdog_s: float = 0.0     # per-step wall-clock budget; an overrun
+                                # counts as a latency fault toward the
+                                # HEALTHY->DEGRADED->SHEDDING ladder
+                                # (0 = watchdog off)
+    chaos_rate: float = 0.0     # fault-injection probability per site draw
+                                # (0 = injector not even constructed: the
+                                # hot paths check one attribute against
+                                # None and pay nothing)
+    chaos_seed: int = 0         # FaultInjector stream seed
+    chaos_sites: tuple = ()     # subset of faults.FAULT_SITES (empty =
+                                # all sites)
 
 
 def sample_rows(logits: jax.Array, key, temperature: float) -> jax.Array:
@@ -229,6 +254,12 @@ def draft_ngram(history: np.ndarray, depth: int, *, max_ngram: int = 3,
 
 
 class Engine:
+    # class-level defaults so resolution helpers (tp_for/spec_depth_for)
+    # stay callable on partially-constructed engine shells (tests stub
+    # Engine via object.__new__ to exercise them without a model)
+    _force_safe = False                 # pin spec0/gather/tp1
+    _fallback = None                    # (step, depth, tp) to restore
+
     def __init__(self, model: Model, params, plan: Optional[RegionPlan] = None,
                  serve_cfg: Optional[ServeConfig] = None, dtree=None):
         self.model = model
@@ -274,6 +305,19 @@ class Engine:
         self._tp_params: dict = {}                  # tp -> mesh-placed params
         self._load_bucket: Optional[int] = None
         self.decisions_log: list = []
+
+        # -- failure domains + graceful degradation --------------------------
+        self.faults = None                          # FaultInjector or None
+        if self.cfg.chaos_rate > 0:
+            self.faults = FaultInjector(
+                seed=self.cfg.chaos_seed, rate=self.cfg.chaos_rate,
+                sites=self.cfg.chaos_sites or None)
+        self.health = HealthMonitor(HealthPolicy(
+            max_retries=self.cfg.max_retries,
+            watchdog_s=self.cfg.watchdog_s))
+        self._force_safe = False                    # pin spec0/gather/tp1
+        self._fallback = None                       # (step, depth, tp) to
+                                                    # restore on recovery
 
         # -- online autotuning state (measure->corpus->train->decide) --------
         self.corpus = None
@@ -423,7 +467,11 @@ class Engine:
     def spec_depth_for(self, plan: RegionPlan) -> int:
         """spec_depth resolution, mirroring :meth:`page_size`: an explicit
         ServeConfig value pins it; in auto mode the plan's attn-region knob
-        (the tuner/PlanDecider channel) decides; unset means off."""
+        (the tuner/PlanDecider channel) decides; unset means off.  A
+        degraded engine (``_force_safe``) pins 0 ahead of everything —
+        the safe plan outranks even an explicit ServeConfig pin."""
+        if self._force_safe:
+            return 0
         if self.cfg.temperature > 0 or self.model.cfg.n_experts:
             return 0
         if self.cfg.spec_depth >= 0:
@@ -483,6 +531,8 @@ class Engine:
         """
         want = self.cfg.tp if self.cfg.tp > 0 else (
             max(plan.config_for("layer0/attn").tp_degree, 0) or 1)
+        if self._force_safe:
+            want = 1                # degraded: safe plan outranks the pin
         kvh = getattr(self.model.cfg, "n_kv_heads", 0) or 1
         n_dev = len(jax.devices())
         tp = max(int(want), 1)
@@ -607,6 +657,10 @@ class Engine:
                 watermark=self.mem_watermark_for(self.plan),
                 max_preempts=self.cfg.max_preempts))
             self._pool.prefix_enabled = self.prefix_cache_for(self.plan)
+            # thread the (optional) fault injector through the paged hot
+            # paths; None keeps them zero-overhead
+            self._pool.faults = self.faults
+            self.governor.faults = self.faults
             self._build_step = self._build_paged_step
         else:
             self._pool = SlotKVPool(self._slot_cache_avals(),
@@ -675,7 +729,17 @@ class Engine:
         The vocab-sharded logits replicate right before sampling — the
         step's single collective boundary — so the sampler and the host's
         acceptance walk are shard-count-independent and greedy output is
-        bit-identical across degrees.  Returns (compiled, D, tp).
+        bit-identical across degrees.
+
+        The step also carries the always-on health guard: a per-slot
+        ``finite`` flag, False when any of the slot's S logit rows
+        contains a NaN/inf (one fused reduction over logits the step
+        already produced — LIKWID-style monitoring that costs a rounding
+        error next to the decode matmuls).  Inactive slots decode the
+        null page and are garbage *by design*, so they are forced
+        healthy.  The host commits nothing from a non-finite slot and
+        retries it (see ``_serve_paged``).  Returns (compiled, D, tp);
+        the compiled step returns ``(tokens (B,S), finite (B,), pages)``.
         """
         model, temp = self.model, self.cfg.temperature
         sample = self._sample_pool
@@ -698,7 +762,9 @@ class Engine:
                 flat = jax.lax.with_sharding_constraint(
                     flat, NamedSharding(mesh, P()))
             act = jnp.repeat(active, S_)
-            return sample(flat, act, key, temp).reshape(B, S_), pages
+            finite = (jnp.isfinite(flat).all(axis=-1).reshape(B, S_)
+                      .all(axis=-1) | ~active)
+            return sample(flat, act, key, temp).reshape(B, S_), finite, pages
 
         pool = self._pool
         B, MP = pool.n_slots, pool.max_pages_per_slot
@@ -785,6 +851,11 @@ class Engine:
         retrained tree would silently never take effect until the next
         occupancy-bucket change (regression-tested)."""
         if self._pool_rc is None or self.decider is None:
+            return
+        if self._fallback is not None:
+            # degraded: the safe plan is pinned; a replan would override
+            # it.  Recovery (_exit_fallback) sets _force_replan so the
+            # decider re-decides promptly once healthy.
             return
         bucket = load_bucket(n_active)
         if (bucket == self._load_bucket
@@ -902,6 +973,13 @@ class Engine:
         if lookups:
             scaled = dataclasses.replace(
                 scaled, prefix_hit_rate=bucket_rate(acc[4] / lookups))
+        # health channel: the monitor's windowed faulted-step fraction at
+        # flush time, decile-quantized like prefix_hit_rate so identical
+        # windows still dedup — lets the tree learn which classes earn
+        # their reward under faults (degradation responses as decisions)
+        fr = self.health.fault_rate()
+        if fr > 0:
+            scaled = dataclasses.replace(scaled, fault_rate=bucket_rate(fr))
         self.corpus.append(canonical(region), features(scaled),
                            cls, reward=toks / secs)
 
@@ -967,6 +1045,12 @@ class Engine:
             rc.pop("tp_degree", None)
         if self._paged:
             raw["tp"] = self.tp_for(plan)
+            # the resolved depth rides alongside for the same reason —
+            # and because resolution can change while the raw knob (or a
+            # ServeConfig pin) does not: a degraded engine (_force_safe)
+            # pins depth 0, and its safe step must never collide with
+            # the healthy executable cached for the same plan
+            raw["spec"] = self.spec_depth_for(plan)
         return _json.dumps(raw, sort_keys=True)
 
     def _validate(self, req: Request):
@@ -997,7 +1081,18 @@ class Engine:
         Arrivals are replayed on the wall clock relative to serve() entry;
         requests with arrival_s=0 are all admissible immediately.  Mutates
         the Request objects in place (out_tokens, timings) and returns
-        {"requests", "stats", "steps", "decisions"}.
+        {"requests", "stats", "steps", "decisions", "failures", "health"}.
+
+        Failure semantics (docs/failure-semantics.md): runtime faults —
+        non-finite logits, allocator exhaustion, growth denial, injected
+        chaos — never raise.  Each faulted request retries with capped
+        backoff and, past ``max_retries``, lands in the terminal FAILED
+        state with every page released; waiting requests past their
+        deadline (EXPIRED) or beyond ``max_queue`` (REJECTED) are shed
+        explicitly.  The only raises left are pre-serve validation
+        (structurally infeasible requests — a programmer error, checked
+        before any state exists) and engine-internal errors, which abort
+        the trace after releasing every resident's pages.
         """
         self._ensure_pool()
         for r in requests:
@@ -1006,6 +1101,10 @@ class Engine:
         # only this run's decisions are returned
         self._load_bucket = None
         log_start = len(self.decisions_log)
+        # fresh health window per trace; a fallback left armed by the
+        # previous trace is unwound so this one starts on the decided plan
+        self.health.reset()
+        self._exit_fallback()
         sched = Scheduler()
         for r in requests:
             sched.submit(r)
@@ -1016,14 +1115,71 @@ class Engine:
         else:
             res = self._serve_slots(sched)
 
+        stats = summarize(requests)
         out = {
             "requests": list(requests),
-            "stats": summarize(requests),
+            "stats": stats,
             "decisions": list(self.decisions_log[log_start:]),
             "autotune": self.autotune_summary(),
+            "failures": {
+                "failed": stats.get("failed", 0),
+                "expired": stats.get("expired", 0),
+                "rejected": stats.get("rejected", 0),
+                "retries": stats.get("retries", 0),
+                "errors": {r.rid: r.error for r in requests if r.error},
+            },
+            "health": self.health.summary(),
+            "faults": (self.faults.summary() if self.faults is not None
+                       else {"enabled": False, "injected_total": 0}),
         }
         out.update(res)
         return out
+
+    # ------------------------------------------------------------------
+    # Graceful degradation: the safe-plan fallback
+    # ------------------------------------------------------------------
+    def _safe_plan(self) -> RegionPlan:
+        """The degradation target: the live plan with the attention region
+        forced to the boring-but-robust configuration — no speculation,
+        the gather (non-Pallas) attention path, no tensor parallelism."""
+        import copy
+        plan = copy.deepcopy(self.plan)
+        base = plan.region_configs.get("layer/attn", RegionConfig())
+        plan.region_configs["layer/attn"] = dataclasses.replace(
+            base, spec_depth=0, attn_impl="", tp_degree=1)
+        return plan
+
+    def _enter_fallback(self):
+        """Pin the safe plan (spec0 / gather attn / tp1).  The safe step
+        goes through the regular ``_pool_steps`` cache — healthy
+        executables stay cached untouched and the fallback compiles at
+        most once per engine; re-entry is a dictionary fetch.  The
+        previous (step, depth, tp) is saved for :meth:`_exit_fallback`."""
+        if self._fallback is not None or not self._paged:
+            return
+        prev = (self._pool_step, self._spec_depth, self._serve_tp)
+        self._force_safe = True
+        plan = self._safe_plan()
+        key = self._step_cache_key(plan)
+        if key not in self._pool_steps:
+            self._pool_steps[key] = self._build_step(plan)
+        step, depth, tp = self._pool_steps[key]
+        self._apply_tp(tp)
+        self._pool_step, self._spec_depth = step, depth
+        self._fallback = prev
+        self.health.taps["fallbacks"] += 1
+
+    def _exit_fallback(self):
+        """Recovered: restore the pre-fallback executable/placement and
+        ask the decider to re-decide on the next step."""
+        if self._fallback is None:
+            return
+        step, depth, tp = self._fallback
+        self._fallback = None
+        self._force_safe = False
+        self._apply_tp(tp)
+        self._pool_step, self._spec_depth = step, depth
+        self._force_replan = True
 
     def _commit_tokens(self, sched: Scheduler, out_np, n_cand, pending,
                        active, t, on_complete) -> dict:
@@ -1081,6 +1237,10 @@ class Engine:
                 pending[slot] = first_tok
                 sched.bind(req, slot, now())
                 active[slot] = True
+            # deadline/queue shedding applies to the slot path too — the
+            # policy is scheduler-level, not a paged-pool feature
+            sched.shed_waiting(now(), self.cfg.max_queue,
+                               self.cfg.deadline_s)
             if not sched.active:
                 nxt = sched.next_arrival()
                 if nxt is None:
@@ -1193,10 +1353,32 @@ class Engine:
             pending[victim] = 0
             bt_dev["dirty"] = True
 
+        def fail_request(slot, req, reason):
+            """A resident request exhausted its retries: terminal FAILED
+            with every page released — the failure domain is one request,
+            and the allocator's invariants hold immediately after.  Its
+            history is suspect, so nothing is published to the prefix
+            index."""
+            pool.release(slot)
+            active[slot] = False
+            pending[slot] = 0
+            bt_dev["dirty"] = True
+            sched.fail(req, now(), reason)
+
         def admit_ready(t):
             while True:
                 req = sched.peek_ready(t)
                 if req is None:
+                    return
+                # SHEDDING rung of the degradation ladder: stop taking on
+                # fresh work while faults are this frequent — preempted
+                # residents still re-enter (their progress is paid for).
+                # Only while something is resident: an empty pool has
+                # nothing to protect, and gating it would idle-spin the
+                # loop with no steps to ever recover health through.
+                if (self.health.shedding
+                        and req.state is RequestState.WAITING
+                        and (sched.active or sched.prefilling)):
                     return
                 # duplicate-arrival dedup: a fresh request whose prompt
                 # matches one still mid-prefill is HELD (head-of-line, FIFO
@@ -1259,8 +1441,15 @@ class Engine:
                 else:
                     prefills.append(req)
 
-        while not sched.done():
+        try:
+          while not sched.done():
             admit_ready(now())
+            # load shedding right after admission: whatever is STILL
+            # arrived-but-waiting is past-deadline fodder and counts
+            # against the queue bound — explicit EXPIRED/REJECTED
+            # outcomes instead of unbounded queueing
+            sched.shed_waiting(now(), self.cfg.max_queue,
+                               self.cfg.deadline_s)
 
             # interleaved chunked prefill: a bounded budget per loop pass
             budget = max(self.cfg.prefill_chunks_per_step, 1)
@@ -1284,9 +1473,26 @@ class Engine:
                     jnp.asarray(chunk[None]),
                     jnp.asarray(pool.block_tables[slot]),
                     jnp.asarray(req.prefill_pos, jnp.int32))
+                budget -= 1
+                if (self.faults is not None
+                        and self.faults.fire("prefill.nan")):
+                    # the chunk's K/V is suspect: advance nothing, so the
+                    # retry deterministically rewrites the same rows with
+                    # the same values.  Rotate to the back of the prefill
+                    # line so a repeat offender never head-of-line blocks
+                    # healthy prompts.
+                    req.retries += 1
+                    req.fail_streak += 1
+                    if req.fail_streak > self.health.policy.max_retries:
+                        prefills.pop(0)
+                        fail_request(slot, req,
+                                     "prefill fault past max_retries")
+                    else:
+                        prefills.append(prefills.pop(0))
+                    continue
+                req.fail_streak = 0
                 pool.advance(slot, true_c)
                 req.prefill_pos += true_c
-                budget -= 1
                 if req.prefill_pos >= feed.size:
                     pending[slot] = int(req.token_history()[-1])
                     # the prompt's full pages are now written: publish them
@@ -1330,6 +1536,14 @@ class Engine:
                 if slot not in sched.active:
                     continue                # taken as an earlier victim
                 req = sched.active[slot]
+                if req.backoff > 0:
+                    # capped-backoff retry: a recently-faulted slot sits
+                    # out (masked like a stall — nothing written, nothing
+                    # committed, pending untouched) and neither grows nor
+                    # evicts anyone while it waits
+                    req.backoff -= 1
+                    stalled.append(slot)
+                    continue
                 cap = req.prompt.size - 1 + req.max_new_tokens
                 # besides headroom, this step's K/V writes must land in
                 # *private* pages: cow_for_write copies any still-shared
@@ -1384,13 +1598,34 @@ class Engine:
                     pool.block_tables * eff[:, None])
                 bt_dev["act"] = jnp.asarray(eff)
                 bt_dev["dirty"] = False
-            out, pool.pages = self._pool_step(
+            out, finite, pool.pages = self._pool_step(
                 self._step_params, pool.pages, jnp.asarray(toks_in),
                 bt_dev["arr"], jnp.asarray(pool.lengths * eff),
                 bt_dev["act"], sub)
+            if (self.faults is not None
+                    and self.faults.fire("step.latency")):
+                # artificial latency spike, inside the step's measured
+                # window so the watchdog (and the tap's reward) sees it
+                time.sleep(self.faults.latency_s)
             steps += 1
             gov.note_step(len(stalled))
             out_np = np.asarray(out)
+            finite_np = np.asarray(finite)
+
+            # the per-step health guard: a stepped slot whose logits came
+            # back non-finite (or was chaos-flagged as such) commits
+            # NOTHING — its lengths never advance, so the retry recomputes
+            # the very same rows deterministically
+            faulted: set[int] = set()
+            for slot in list(sched.active):
+                if stall_arr[slot] or bool(finite_np[slot]):
+                    continue
+                faulted.add(slot)
+            if self.faults is not None:
+                for slot in list(sched.active):
+                    if (not stall_arr[slot] and slot not in faulted
+                            and self.faults.fire("logits.nan")):
+                        faulted.add(slot)
 
             # acceptance walk: draft i is valid iff it equals the verify
             # step's argmax after consuming draft i-1 (and every earlier
@@ -1398,10 +1633,27 @@ class Engine:
             n_cand = np.ones((B,), np.int32)
             written = {}
             slot_steps += len(sched.active) - len(stalled)
-            for slot in sched.active:
+            for slot in list(sched.active):
                 if stall_arr[slot]:
                     n_cand[slot] = 0        # sat out: commit nothing
                     continue
+                req = sched.active[slot]
+                if slot in faulted:
+                    # faulted: exactly the stall contract (no advance, no
+                    # commit, pending untouched) plus retry accounting —
+                    # capped backoff, then terminal FAILED with all pages
+                    # released once the streak passes max_retries
+                    n_cand[slot] = 0
+                    req.retries += 1
+                    req.fail_streak += 1
+                    if req.fail_streak > self.health.policy.max_retries:
+                        fail_request(slot, req,
+                                     "non-finite logits past max_retries")
+                    else:
+                        req.backoff = self.health.policy.backoff(
+                            req.fail_streak)
+                    continue
+                req.fail_streak = 0
                 len0 = int(pool.lengths[slot])
                 # rows past the reach of the slot's *reserved* pages went
                 # to the null page; their logits are garbage, so cap
@@ -1419,9 +1671,38 @@ class Engine:
             for slot, c in consumed.items():
                 if slot in sched.active:    # finished slots already released
                     pool.rollback(slot, written[slot] - c)
-            self._tap_step(n_act, sum(consumed.values()),
-                           time.perf_counter() - t_step0)
+            dt_step = time.perf_counter() - t_step0
+            # fold the step into the health ladder, then act on it: enter
+            # the safe-plan fallback while degraded, restore on recovery
+            self.health.note_step(dt_step, n_slot_faults=len(faulted))
+            if self.health.degraded:
+                self._enter_fallback()
+            else:
+                self._exit_fallback()
+            self._tap_step(n_act, sum(consumed.values()), dt_step)
+        except BaseException as e:
+            # engine-internal error mid-serve: the failure domain is the
+            # whole trace, but the POOL must outlive it — release every
+            # resident's pages (best-effort per slot: one bad row must not
+            # strand the rest) and re-raise only after the allocator's
+            # invariants are re-checked, so a later serve on this engine
+            # starts from a provably consistent pool
+            for slot, req in (list(sched.prefilling.items())
+                              + list(sched.active.items())):
+                try:
+                    pool.release(slot)
+                except Exception:
+                    pass
+                sched.fail(req, now(), f"engine aborted: "
+                                       f"{type(e).__name__}: {e}")
+            pool.allocator.check_invariants()
+            raise
+        # serve-end audit: refcounts match owners AND no live page is
+        # stranded outside the prefix index (every slot released)
+        pool.allocator.check_invariants()
+        leaked = pool.leaked_pages()
         return {"steps": steps,
+                "page_leaks": leaked,
                 "spec": {"committed_tokens": committed_total,
                          "slot_steps": slot_steps,
                          "max_depth": max_depth,

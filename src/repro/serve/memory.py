@@ -99,6 +99,9 @@ class MemoryGovernor:
         self.free_pages_min: Optional[int] = None   # exact, not sampled
         self._trace_stride = 1
         self._trace_skip = 0
+        # optional FaultInjector (serve/faults.py), threaded in by the
+        # engine; None = zero-overhead production path
+        self.faults = None
 
     _TRACE_CAP = 128                # decimate when the trace hits this
 
@@ -177,6 +180,11 @@ class MemoryGovernor:
         pool = self.pool
         length = int(pool.lengths[slot])
         reserved = pool.reserved_tokens(slot)
+        if self.faults is not None and self.faults.fire("mem.grow"):
+            # injected growth/CoW denial: report only what is already
+            # reserved, as if the allocator were dry.  Transient — the
+            # engine's victim/stall machinery retries next step.
+            return reserved - length
         while reserved < length + 1:
             if not pool.grow(slot):
                 return reserved - length

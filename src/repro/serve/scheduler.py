@@ -46,6 +46,17 @@ class RequestState(enum.Enum):
     DECODE = "decode"
     PREEMPTED = "preempted"     # evicted mid-decode; awaiting re-admission
     DONE = "done"
+    FAILED = "failed"           # unrecoverable fault; all pages released
+    EXPIRED = "expired"         # deadline_s elapsed while still WAITING
+    REJECTED = "rejected"       # bounded-queue shed or invalid at submit
+
+
+#: States a request can never leave.  Every request in a finished trace
+#: is in exactly one of these (the chaos property tests assert it).
+TERMINAL_STATES = frozenset({
+    RequestState.DONE, RequestState.FAILED,
+    RequestState.EXPIRED, RequestState.REJECTED,
+})
 
 
 @dataclasses.dataclass
@@ -56,6 +67,13 @@ class Request:
     max_new_tokens: int
     arrival_s: float = 0.0
     eos_id: Optional[int] = None        # falls back to ServeConfig.eos_id
+    deadline_s: float = 0.0             # time-to-admission budget from
+                                        # arrival; 0 falls back to
+                                        # ServeConfig.deadline_s (0 = none).
+                                        # Applies only while WAITING —
+                                        # residents and preempted requests
+                                        # are never expired (their pages/
+                                        # progress are already paid for).
     # -- runtime state (filled in by the scheduler/engine) -------------------
     state: RequestState = RequestState.WAITING
     slot: Optional[int] = None
@@ -70,6 +88,11 @@ class Request:
     prefix_hit_tokens: int = 0          # history tokens adopted from the
                                         # prefix cache instead of prefilled
                                         # (summed over re-admissions)
+    error: str = ""                     # why FAILED/EXPIRED/REJECTED
+    retries: int = 0                    # total faulted steps survived
+    fail_streak: int = 0                # consecutive step failures (reset
+                                        # on any committed token)
+    backoff: int = 0                    # decode steps left to sit out
     _prompt_key: Optional[str] = dataclasses.field(default=None, repr=False)
 
     def prompt_key(self) -> str:
@@ -108,6 +131,8 @@ class Scheduler:
         self.prefilling: dict[int, Request] = {}  # slot -> mid-prefill request
         self.active: dict[int, Request] = {}      # slot -> decoding request
         self.finished: list[Request] = []
+        self.failed: list[Request] = []           # terminal FAILED
+        self.shed: list[Request] = []             # terminal EXPIRED/REJECTED
 
     def submit(self, req: Request) -> None:
         if req.state is not RequestState.WAITING:
@@ -186,6 +211,70 @@ class Scheduler:
         req.t_preempt = now_s
         self.preempted.append(req)
 
+    # -- failure domains -----------------------------------------------------
+    def fail(self, req: Request, now_s: float, reason: str = "") -> None:
+        """A resident request hit an unrecoverable fault: drop it from its
+        slot (the caller releases its pages *before* calling this) and move
+        it to the terminal FAILED state.  Other residents are untouched —
+        the failure domain is one request."""
+        if self.active.get(req.slot) is req:
+            del self.active[req.slot]
+        elif self.prefilling.get(req.slot) is req:
+            del self.prefilling[req.slot]
+        else:
+            raise ValueError(f"request {req.rid} not resident on slot "
+                             f"{req.slot}")
+        req.slot = None
+        req.state = RequestState.FAILED
+        req.error = reason
+        req.t_done = now_s
+        self.failed.append(req)
+
+    def shed_waiting(self, now_s: float, max_queue: int = 0,
+                     default_deadline_s: float = 0.0) -> tuple[list, list]:
+        """Load shedding over the WAITING queue: expire requests whose
+        admission deadline has passed, then bound the arrived-but-waiting
+        backlog to ``max_queue`` (0 = unbounded), rejecting the newest
+        arrivals beyond it.  Explicit EXPIRED/REJECTED outcomes instead of
+        unbounded queueing; residents and preempted requests are exempt.
+        Returns the (expired, rejected) requests shed this call."""
+        expired: list[Request] = []
+        rejected: list[Request] = []
+        keep: deque[Request] = deque()
+        n_arrived = 0
+        for req in self._queue:
+            deadline = req.deadline_s or default_deadline_s
+            if deadline > 0 and now_s > req.arrival_s + deadline:
+                req.state = RequestState.EXPIRED
+                req.error = f"deadline {deadline:.3f}s exceeded while waiting"
+                req.t_done = now_s
+                expired.append(req)
+                continue
+            if req.arrival_s <= now_s:
+                n_arrived += 1
+                if max_queue > 0 and n_arrived > max_queue:
+                    req.state = RequestState.REJECTED
+                    req.error = f"admission queue full (max_queue={max_queue})"
+                    req.t_done = now_s
+                    rejected.append(req)
+                    continue
+            keep.append(req)
+        if expired or rejected:
+            self._queue = keep
+            self.shed.extend(expired)
+            self.shed.extend(rejected)
+        return expired, rejected
+
+    def reject(self, req: Request, reason: str) -> None:
+        """Refuse a request before it ever queues (infeasible shape, bad
+        budget).  Terminal REJECTED; the trace keeps serving."""
+        if req.state is not RequestState.WAITING:
+            raise ValueError(f"request {req.rid} already {req.state}")
+        req.state = RequestState.REJECTED
+        req.error = reason
+        req.t_done = 0.0
+        self.shed.append(req)
+
     # -- completion ----------------------------------------------------------
     def complete(self, req: Request, now_s: float) -> None:
         if self.active.get(req.slot) is not req:
@@ -209,8 +298,15 @@ class Scheduler:
 def summarize(requests: Sequence[Request]) -> dict:
     """Aggregate throughput/latency stats over a finished trace."""
     done = [r for r in requests if r.state is RequestState.DONE]
+    failures = {
+        "failed": sum(1 for r in requests if r.state is RequestState.FAILED),
+        "expired": sum(1 for r in requests if r.state is RequestState.EXPIRED),
+        "rejected": sum(
+            1 for r in requests if r.state is RequestState.REJECTED),
+        "retries": int(sum(r.retries for r in requests)),
+    }
     if not done:
-        return {"n_done": 0, "tokens": 0, "tok_per_s": 0.0}
+        return {"n_done": 0, "tokens": 0, "tok_per_s": 0.0, **failures}
     tokens = sum(len(r.out_tokens) for r in done)
     t_end = max(r.t_done for r in done)
     t_start = min(r.arrival_s for r in done)
@@ -238,4 +334,6 @@ def summarize(requests: Sequence[Request]) -> dict:
         # prefix-cache accounting (zeros with sharing off)
         "prefix_hit_requests": sum(1 for r in requests if r.prefix_hit_tokens),
         "prefix_hit_tokens": int(sum(r.prefix_hit_tokens for r in requests)),
+        # failure-domain accounting (zeros on fault-free traces)
+        **failures,
     }
