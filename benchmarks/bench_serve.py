@@ -63,6 +63,21 @@ high-water <= ~55% of tp1's, with bit-identical greedy tokens.  Gated by
 CI's ``tp-smoke`` job via ``ratios.tp2_per_device_high_water``;
 ``--tp-only`` runs just this section (skip-note on a 1-device host).
 
+The **recurrent rows** sweep the dual-mode linear-attention serving path
+chunk-vs-fused side by side on one mixer family (``--family
+{stablelm,rwkv6,mamba2,zamba2}``, the zoology-style family sweep;
+stablelm records a skip note — attention KV has no scan-mode split).
+Four pinned engines ({chunk,fused_recurrent} x spec {0,2}) must serve
+bit-identically to the fused/spec0 baseline (the pre-dual-mode slot
+path), chunked-scan prefill must clear >= 1.3x fused-recurrent prefill
+tok/s on a prefill-heavy trace, and an ``auto`` engine with a
+counter-trained scan tree must vote the chunk class on low-occupancy
+(prefill-heavy) buckets and the fused class at full occupancy
+(decode-heavy) — the mode split recorded per load bucket in
+``BENCH_serve.json``.  Gated by CI's ``recurrent-smoke`` job via
+``ratios.recurrent_chunk_vs_fused_prefill``; ``--recurrent-only`` runs
+just this section.
+
 Row format: ``name,us_per_token,tok_per_s`` (plus derived ratio rows).
 After a run, :data:`json_summary` holds the machine-readable record
 (tok/s, latency percentiles, TTFT for every path, HBM high-water,
@@ -75,10 +90,12 @@ from __future__ import annotations
 
 import json
 import sys
+import time
 
 import numpy as np
 
 import jax
+import jax.numpy as jnp
 
 from repro.configs.registry import get_config
 from repro.launch.serve import run_static
@@ -137,6 +154,31 @@ PROMPT_TP = 12
 GENS_TP = [12, 8, 10, 8]
 PAGE_TP = 8
 SLOTS_TP = 3
+
+# -- recurrent section (dual-mode linear attention: chunk vs fused scan) -----
+RECUR_ARCH = {"stablelm": "stablelm-1.6b", "rwkv6": "rwkv6-3b",
+              "mamba2": "zamba2-2.7b",     # zamba2 cfg with attn_every=0:
+                                           # the pure-Mamba2 backbone
+              "zamba2": "zamba2-2.7b"}
+PROMPT_RC = 513                # prefill-heavy: 512-token feeds (multiples of
+                               # the scan chunk — a ragged tail would fall
+                               # back to the sequential scan and flatten the
+                               # ratio), 2-token answers, so serve time IS
+                               # the prefill path and chunk-vs-fused measures
+                               # the scan reassociation, not the decode loop
+GEN_RC = 2
+N_RC = 4
+SCAN_CHUNK_RC = 32             # scan chunk length (the tuner's knob, threaded
+                               # through the plan's scan-region config): 32 is
+                               # the crossover sweet spot at the reduced CPU
+                               # shapes — the intra-chunk C x C work stays
+                               # small while the sequential scan still pays
+                               # per-token loop overhead
+PROMPT_RC_D = 9                # decode-heavy: 8-token feeds, 32-token
+GEN_RC_D = 32                  # answers — all slots decoding at once, the
+                               # regime where the sequential recurrence wins
+SLOTS_RC = 3
+CHUNK_RC = 16                  # auto engine's interleaved state-prefill chunk
 
 # -- chaos section (fault-injected serving: retries, fallback, shedding) -----
 PROMPT_CH = 12
@@ -664,6 +706,238 @@ def _chaos_section(model, params, vocab: int) -> tuple[list, dict]:
     return rows, sec
 
 
+def _scan_dtree(engine: Engine):
+    """Train a DecisionTree on the engine's OWN measured slot-step counters
+    for the scan-bearing region (rwkv6's time-mix / the mamba block),
+    scaled by occupancy the way the serve-time PlanDecider scales them:
+    low-occupancy buckets (most slots still prefilling) label the chunk
+    class — intra-chunk matmuls amortise the long feeds — and full
+    occupancy labels the fused class, where every step is a 1-token
+    recurrence and reassociation buys nothing.  Same loop as
+    :func:`_spec_dtree`, different knob: counters in, scan_mode class out."""
+    from repro.core import counters as counters_mod
+    from repro.core.dtree import DecisionTree
+    from repro.core.dtree import features as dt_features
+    engine._ensure_pool()
+    rc = counters_mod.collect(engine._pool_step)
+    fam = getattr(engine.model.cfg, "family", "")
+    lo_cls, hi_cls = (("scan_chunk", "scan_fused") if fam == "ssm"
+                      else ("scan_chunk_ssd", "scan_fused_ssd"))
+    scan = [c for r, c in rc.regions.items()
+            if r and ("tmix" in r or "ssm" in r)]
+    X, y = [], []
+    for c in scan or [c for r, c in rc.regions.items() if r]:
+        for frac, label in ((0.25, lo_cls), (0.5, lo_cls), (1.0, hi_cls)):
+            X.append(dt_features(c.scaled(frac)))
+            y.append(label)
+    return DecisionTree(max_depth=3).fit(np.stack(X), y), rc
+
+
+def _recurrent_section(family: str, reps: int = 2) -> tuple[list, dict]:
+    """Dual-mode linear-attention serving, swept chunk-vs-fused side by
+    side for one mixer family.  Five slot-pool engines share params and
+    traces: four pin ``scan_mode`` x ``spec_depth`` ({chunk,fused} x
+    {0,2}) — fused/spec0 is byte-for-byte the pre-dual-mode slot path, so
+    the bit-identity asserts cover every new code path against the old
+    one — and an ``auto`` engine runs interleaved chunked state-prefill
+    with a counter-trained scan tree voting the mode per load bucket.
+
+    Gates (CI's ``recurrent-smoke`` job): every engine's greedy tokens
+    bit-identical to the baseline on both traces, chunked-scan prefill
+    >= 1.3x fused-recurrent prefill tok/s on the prefill-heavy trace
+    (``ratios.recurrent_chunk_vs_fused_prefill``), and the decider's
+    scan class flipping between the lowest and highest observed load
+    buckets."""
+    import dataclasses
+    arch = RECUR_ARCH[family]
+    if family == "stablelm":
+        rows = ["serve_recurrent_skipped,1,attention_only_family"]
+        return rows, {
+            "family": family, "arch": arch,
+            "skipped": ("scan modes need a recurrent-state family "
+                        "(rwkv6/mamba2/zamba2): attention KV has no "
+                        "chunk-vs-fused split"),
+        }
+    cfg = get_config(arch).reduced()
+    if family == "mamba2":
+        cfg = dataclasses.replace(cfg, attn_every=0)
+    model = build(cfg)
+    # f32 params (unlike the stablelm sections): the chunk/fused split is
+    # gated on BITWISE-identical greedy streams, and f32 keeps argmax ties
+    # deterministic across the reassociated and sequential scans
+    params = jax.tree.map(lambda a: a * PARAM_SCALE,
+                          model.init(jax.random.PRNGKey(0),
+                                     dtype=jnp.float32))
+    rng = np.random.default_rng(29)
+    pf_prompts = rng.integers(0, cfg.vocab_size,
+                              (N_RC, PROMPT_RC)).astype(np.int32)
+    dc_prompts = rng.integers(0, cfg.vocab_size,
+                              (N_RC, PROMPT_RC_D)).astype(np.int32)
+
+    def mk_pf():
+        # burst arrivals: no arrival-wait tail diluting the measured ratio
+        return [Request(rid=i, prompt=pf_prompts[i].copy(),
+                        max_new_tokens=GEN_RC) for i in range(N_RC)]
+
+    def mk_dc():
+        return [Request(rid=i, prompt=dc_prompts[i].copy(),
+                        max_new_tokens=GEN_RC_D) for i in range(N_RC)]
+
+    common = dict(max_len=PROMPT_RC + GEN_RC + 1, max_slots=SLOTS_RC,
+                  paged="off")
+    modes = {"fused_spec0": ("fused_recurrent", 0),
+             "chunk_spec0": ("chunk", 0),
+             "fused_spec2": ("fused_recurrent", 2),
+             "chunk_spec2": ("chunk", 2)}
+    engs = {tag: Engine(model, params, serve_cfg=ServeConfig(
+                **common, prefill_chunk=0, scan_mode=m, spec_depth=d))
+            for tag, (m, d) in modes.items()}
+    # top_n widened so the decider consults the scan region even when the
+    # channel-mix / unembed matmuls out-flop it in the reduced config
+    auto = Engine(model, params, serve_cfg=ServeConfig(
+        **common, prefill_chunk=CHUNK_RC, scan_mode="auto", spec_depth=0,
+        autoplan_top_n=8))
+    # chunk length on the scan region (tuner knob, see SCAN_CHUNK_RC);
+    # mode-invariant outputs, so the bit-identity asserts still bind
+    from repro.core.policy import RegionConfig
+    scan_region = "layer/tmix" if cfg.family == "ssm" else "layer/ssm"
+    for eng in list(engs.values()) + [auto]:
+        eng.plan.region_configs[scan_region] = RegionConfig(
+            chunk=SCAN_CHUNK_RC)
+    auto.dtree, auto._pool_rc = _scan_dtree(auto)
+
+    # warm every engine on both trace shapes (prefill fns, both scan-mode
+    # steps, every occupancy bucket the decider can visit)
+    for n_active in range(1, SLOTS_RC + 1):
+        auto._maybe_replan(n_active)
+    for eng in list(engs.values()) + [auto]:
+        eng.serve(mk_pf())
+        eng.serve(mk_dc())
+    auto._load_bucket = None
+    auto.decisions_log.clear()
+
+    def timed_best(eng, mk):
+        best = None
+        for _ in range(reps):
+            reqs = mk()
+            t0 = time.perf_counter()
+            res = eng.serve(reqs)
+            el = time.perf_counter() - t0
+            if best is None or el < best[2]:
+                best = (reqs, res, el)
+        return best
+
+    # prefill-heavy: all four pinned engines, bit-identity vs the baseline
+    pf_runs = {tag: timed_best(eng, mk_pf) for tag, eng in engs.items()}
+    base_pf = pf_runs["fused_spec0"][0]
+    for tag, (reqs, _, _) in pf_runs.items():
+        for a, b in zip(reqs, base_pf):
+            assert a.out_tokens == b.out_tokens, (
+                f"{family}/{tag} changed request {a.rid}'s greedy tokens")
+    pf_tokens = (PROMPT_RC - 1) * N_RC
+    pf_tok_s = {tag: pf_tokens / max(el, 1e-9)
+                for tag, (_, _, el) in pf_runs.items()}
+    ratio_pf = pf_tok_s["chunk_spec0"] / max(pf_tok_s["fused_spec0"], 1e-9)
+
+    # decode-heavy: the fused side's home turf (ratio recorded, not gated)
+    dc_runs = {tag: timed_best(engs[tag], mk_dc)
+               for tag in ("fused_spec0", "chunk_spec0")}
+    base_dc = dc_runs["fused_spec0"][0]
+    for a, b in zip(dc_runs["chunk_spec0"][0], base_dc):
+        assert a.out_tokens == b.out_tokens, (
+            f"{family}/chunk decode changed request {a.rid}'s tokens")
+    dc_tok_s = {tag: r[1]["stats"]["tok_per_s"]
+                for tag, r in dc_runs.items()}
+
+    # auto engine on both traces: chunked state-prefill interleaved with
+    # decode, scan mode the decider's per-bucket call — still bit-identical
+    auto_pf = timed_best(auto, mk_pf)
+    auto_dc = timed_best(auto, mk_dc)
+    for run_reqs, base in ((auto_pf[0], base_pf), (auto_dc[0], base_dc)):
+        for a, b in zip(run_reqs, base):
+            assert a.out_tokens == b.out_tokens, (
+                f"{family}/auto changed request {a.rid}'s greedy tokens")
+
+    def scan_decisions(res):
+        return [(n_active, cls) for n_active, dec in res["decisions"]
+                for r, cls in dec
+                if cls.startswith("scan_") and ("tmix" in r or "ssm" in r)]
+
+    dec_pf = scan_decisions(auto_pf[1])
+    dec_dc = scan_decisions(auto_dc[1])
+    all_dec = sorted(dec_pf + dec_dc)
+    assert all_dec, "decider never placed a scan-mode class"
+    lo_cls, hi_cls = all_dec[0][1], all_dec[-1][1]
+    chunk_cls, fused_cls = (("scan_chunk", "scan_fused")
+                            if cfg.family == "ssm"
+                            else ("scan_chunk_ssd", "scan_fused_ssd"))
+    assert lo_cls == chunk_cls and hi_cls == fused_cls, (
+        f"scan tree never split the modes across load buckets: "
+        f"low={lo_cls} high={hi_cls} over {all_dec}")
+
+    sp2 = pf_runs["chunk_spec2"][1]["spec"]
+    mem = pf_runs["fused_spec0"][1]["memory"]
+    rows = [
+        f"serve_recurrent_family,{family},arch={arch}",
+        (f"serve_recurrent_fused_prefill,"
+         f"{1e6 / max(pf_tok_s['fused_spec0'], 1e-9):.1f},"
+         f"{pf_tok_s['fused_spec0']:.1f}"),
+        (f"serve_recurrent_chunk_prefill,"
+         f"{1e6 / max(pf_tok_s['chunk_spec0'], 1e-9):.1f},"
+         f"{pf_tok_s['chunk_spec0']:.1f}"),
+        (f"serve_recurrent_chunk_vs_fused_prefill,{ratio_pf:.2f},"
+         # the 1.3x gate binds on the family CI runs (mamba2: pure SSD
+         # scans); the others are the informational family sweep — rwkv6's
+         # per-channel-decay chunk form is exp-bound at the reduced CPU
+         # shapes and only pays off at real head dims
+         + ("gate>=1.3" if family == "mamba2" else "informational")),
+        (f"serve_recurrent_decode_fused,"
+         f"{1e6 / max(dc_tok_s['fused_spec0'], 1e-9):.1f},"
+         f"{dc_tok_s['fused_spec0']:.1f}"),
+        (f"serve_recurrent_spec_tokens_per_step,"
+         f"{sp2['tokens_per_step']:.2f},"
+         f"accepted_drafts={sp2['accepted_drafts']}"),
+        (f"serve_recurrent_scan_classes,"
+         f"{len({c for _, c in all_dec})},"
+         f"low_bucket={lo_cls}_high_bucket={hi_cls}"),
+        (f"serve_recurrent_hbm_mib,{mem['hbm_bytes']/2**20:.2f},"
+         f"high_water={mem['high_water_bytes']/2**20:.2f}"),
+    ]
+    sec = {
+        "family": family, "arch": arch, "slots": SLOTS_RC,
+        "param_dtype": "float32",
+        "bit_identical": True,         # asserted: modes x spec x auto
+        "prefill_heavy": {
+            "prompt_tokens": PROMPT_RC, "gen_tokens": GEN_RC,
+            "n_requests": N_RC,
+            "prefill_tok_per_s": pf_tok_s,
+            "chunk_vs_fused": ratio_pf,
+        },
+        "decode_heavy": {
+            "prompt_tokens": PROMPT_RC_D, "gen_tokens": GEN_RC_D,
+            "n_requests": N_RC,
+            "tok_per_s": dc_tok_s,
+            "chunk_vs_fused":
+                dc_tok_s["chunk_spec0"] / max(dc_tok_s["fused_spec0"], 1e-9),
+        },
+        "spec": {
+            "max_depth": sp2["max_depth"],
+            "committed_tokens": sp2["committed_tokens"],
+            "accepted_drafts": sp2["accepted_drafts"],
+            "tokens_per_step": sp2["tokens_per_step"],
+        },
+        "auto": {
+            "prefill_chunk": CHUNK_RC,
+            "decisions_prefill_heavy": dec_pf,
+            "decisions_decode_heavy": dec_dc,
+            "low_bucket_class": lo_cls,
+            "high_bucket_class": hi_cls,
+        },
+        "memory": mem,
+    }
+    return rows, sec
+
+
 def _best_of(engine: Engine, base: list[Request], n: int = 2):
     """Serve the identical trace ``n`` times and keep the fastest run —
     wall-clock serving of sub-30ms steps is noisy on shared CPU, and the
@@ -679,13 +953,29 @@ def _best_of(engine: Engine, base: list[Request], n: int = 2):
 
 def run(smoke: bool = False, overcommit_only: bool = False,
         prefix_only: bool = False, tp_only: bool = False,
-        chaos: bool = False, chaos_only: bool = False):
+        chaos: bool = False, chaos_only: bool = False,
+        recurrent_only: bool = False, family: str = "mamba2"):
     global json_summary
     # smoke keeps the same 8-request trace (the CI guard gates on ratios
     # that need the full concurrency of the mixed-length trace) but takes
     # a single measured rep per path instead of best-of-2
     reps = 1 if smoke else 2
     n_req = N_REQ
+    if recurrent_only:
+        # the focused dual-mode recurrent gate (CI's recurrent-smoke job):
+        # chunk-vs-fused bit-identity + prefill ratio + per-bucket scan
+        # decisions for one mixer family, nothing else
+        rc_rows, rc_sec = _recurrent_section(family, reps)
+        yield from rc_rows
+        json_summary = {
+            "arch": RECUR_ARCH[family], "smoke": smoke,
+            "recurrent_only": True, "family": family,
+            "recurrent": rc_sec,
+            "ratios": ({"recurrent_chunk_vs_fused_prefill":
+                        rc_sec["prefill_heavy"]["chunk_vs_fused"]}
+                       if "prefill_heavy" in rc_sec else {}),
+        }
+        return
     cfg = get_config(ARCH).reduced()
     model = build(cfg)
     params = jax.tree.map(lambda a: a * PARAM_SCALE,
@@ -900,6 +1190,11 @@ def run(smoke: bool = False, overcommit_only: bool = False,
         ch_rows, ch_sec = _chaos_section(model, params, cfg.vocab_size)
         yield from ch_rows
 
+    # -- dual-mode recurrent serving: chunk vs fused scan (--family picks
+    # -- the mixer; its own model/params, independent of the stablelm runs)
+    rc_rows, rc_sec = _recurrent_section(family, reps)
+    yield from rc_rows
+
     mem_p = res_p.get("memory", {})
     json_summary = {
         "arch": ARCH, "slots": SLOTS, "page_size": PAGE,
@@ -988,7 +1283,11 @@ def run(smoke: bool = False, overcommit_only: bool = False,
         "overcommit": oc,
         "prefix": pf_sec,
         "tp": tp_sec,
+        "recurrent": rc_sec,
     }
+    if "prefill_heavy" in rc_sec:
+        json_summary["ratios"]["recurrent_chunk_vs_fused_prefill"] = (
+            rc_sec["prefill_heavy"]["chunk_vs_fused"])
     if "per_device_high_water_ratio" in tp_sec:
         json_summary["ratios"]["tp2_per_device_high_water"] = (
             tp_sec["per_device_high_water_ratio"])
@@ -1011,13 +1310,21 @@ if __name__ == "__main__":
     tp_only = "--tp-only" in sys.argv
     ch_only = "--chaos-only" in sys.argv
     ch = "--chaos" in sys.argv
+    rc_only = "--recurrent-only" in sys.argv
+    fam = (sys.argv[sys.argv.index("--family") + 1]
+           if "--family" in sys.argv else "mamba2")
+    if fam not in RECUR_ARCH:
+        sys.exit(f"--family must be one of {sorted(RECUR_ARCH)}, got {fam!r}")
     for row in run(smoke=smoke, overcommit_only=oc_only,
                    prefix_only=pf_only, tp_only=tp_only,
-                   chaos=ch, chaos_only=ch_only):
+                   chaos=ch, chaos_only=ch_only,
+                   recurrent_only=rc_only, family=fam):
         print(row)
     write_json()
     print(f"# wrote BENCH_serve.json (smoke={smoke} "
           f"overcommit_only={oc_only} prefix_only={pf_only} "
-          f"tp_only={tp_only} chaos_only={ch_only})")
-    if smoke and not oc_only and not pf_only and not tp_only and not ch_only:
+          f"tp_only={tp_only} chaos_only={ch_only} "
+          f"recurrent_only={rc_only} family={fam})")
+    if (smoke and not oc_only and not pf_only and not tp_only
+            and not ch_only and not rc_only):
         assert json_summary["paged"]["tok_per_s"] > 0, "smoke run produced 0 tok/s"

@@ -135,6 +135,27 @@ def default_candidates(kind: str = "train") -> list[Candidate]:
                       serve_only=True),
             Candidate("tp4", RegionConfig(tp_degree=4), "attn",
                       serve_only=True),
+            # recurrent scan mode (dual-mode linear attention, the
+            # flash-linear-attention mode split as a region knob): "chunk"
+            # turns the wkv/ssd recurrence's intra-chunk work into causal
+            # matmuls — state HBM traffic drops by the chunk length, so it
+            # wins prefill-heavy buckets; "fused_recurrent" is the
+            # sequential scan — no reassociation overhead, so it wins
+            # decode-heavy buckets.  Greedy output is bit-identical across
+            # modes — a pure code-variant choice per load bucket (ppOpen-AT
+            # style), the decider's call.  Distinct names per region kind:
+            # the decider's menu is name-keyed, and one applies_to string
+            # cannot cover both rwkv6's time-mix and the mamba block.
+            Candidate("scan_chunk", RegionConfig(scan_mode="chunk"),
+                      "tmix", serve_only=True),
+            Candidate("scan_fused",
+                      RegionConfig(scan_mode="fused_recurrent"),
+                      "tmix", serve_only=True),
+            Candidate("scan_chunk_ssd", RegionConfig(scan_mode="chunk"),
+                      "ssm", serve_only=True),
+            Candidate("scan_fused_ssd",
+                      RegionConfig(scan_mode="fused_recurrent"),
+                      "ssm", serve_only=True),
         ]
     return cands
 

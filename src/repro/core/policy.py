@@ -129,6 +129,13 @@ class RegionConfig:
                             # shard over (0 = knob unset; 1 = single-shard).
                             # Reshapes the compiled step — the step cache
                             # keys on it, unlike the allocator-policy knobs.
+    scan_mode: str = ""     # linear-attention scan variant ('' = unset;
+                            # 'fused_recurrent' = sequential VMEM-resident
+                            # recurrence, optimal at T=1 decode; 'chunk' =
+                            # matmul-form chunked parallel scan, optimal
+                            # for prefill; 'auto' = engine picks by phase).
+                            # Recompiles the step — the slot-family step
+                            # cache keys on the resolved mode.
 
     def to_json(self):
         return dataclasses.asdict(self)

@@ -1,13 +1,23 @@
-"""Fused recurrent scan kernels (RWKV6 WKV / Mamba2 SSD).
+"""Linear-attention scan kernels (RWKV6 WKV / Mamba2 SSD), two modes.
 
-The jnp recurrence reads/writes the (N,N) or (P,N) state from HBM every
-step (arithmetic intensity ~1 — the dry-run shows these archs memory-bound
-by exactly this).  The kernel keeps the state in a VMEM scratch across the
-whole sequence: HBM traffic collapses to streaming r/k/v/w once.
+``fused_recurrent`` (wkv_kernel / ssd_kernel): the jnp recurrence
+reads/writes the (N,N) or (P,N) state from HBM every step (arithmetic
+intensity ~1 — the dry-run shows these archs memory-bound by exactly
+this).  The kernel keeps the state in a VMEM scratch across the whole
+sequence: HBM traffic collapses to streaming r/k/v/w once.  Optimal at
+T=1 decode and short verify blocks.
 
-Grid: (B, H) — one (batch row, head) per program; time tiles of ``bt`` steps
-are staged through VMEM blocks.  heads-per-program is the grid
-oversubscription ("SMT") knob; bt trades VMEM for pipeline depth.
+``chunk`` (wkv_chunk_kernel / ssd_chunk_kernel): the same recurrence
+reassociated into matmul form per ``bt``-sized chunk — intra-chunk work
+becomes (bt,bt) / (bt,N) matmuls (MXU-friendly, parallel over the
+chunk), only the O(T/bt) inter-chunk state carry stays sequential.
+Decay ratios live in log space and are masked *before* exponentiation,
+so every surviving exponent is <= 0.  Optimal for prefill (T >> 1).
+
+Grid: (B, H, nt) — one (batch row, head) per program; time tiles of
+``bt`` steps are staged through VMEM blocks.  heads-per-program is the
+grid oversubscription ("SMT") knob; bt trades VMEM for pipeline depth
+(and, in chunk mode, sets the intra-chunk matmul size).
 """
 from __future__ import annotations
 
@@ -82,6 +92,81 @@ def wkv_kernel(r, k, v, w, u, s0, *, bt: int = 256, interpret: bool = False):
     return out, sout
 
 
+def _wkv_chunk_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, o_ref,
+                      sout_ref, s_ref, *, bt: int, nt: int):
+    tb = pl.program_id(2)
+
+    @pl.when(tb == 0)
+    def _init():
+        s_ref[...] = s0_ref[0, 0]
+
+    u = u_ref[0]                                           # (N,)
+    r = r_ref[0, 0]                                        # (bt, N)
+    k = k_ref[0, 0]
+    v = v_ref[0, 0]
+    w = w_ref[0, 0]
+    s = s_ref[...]                                         # (N, N)
+
+    lw = jnp.log(w)
+    linc = jnp.cumsum(lw, axis=0)                          # decay through t
+    lexc = linc - lw                                       # decay through t-1
+    # cross-chunk: r_t reads the entry state decayed by w_0..w_{t-1}
+    out = jnp.dot(r * jnp.exp(lexc), s,
+                  preferred_element_type=jnp.float32)      # (bt, N)
+    # intra-chunk, strictly causal (state read excludes kv_t)
+    tidx = jax.lax.broadcasted_iota(jnp.int32, (bt, bt), 0)
+    sidx = jax.lax.broadcasted_iota(jnp.int32, (bt, bt), 1)
+    expnt = lexc[:, None, :] - linc[None, :, :]            # (bt, bt, N)
+    expnt = jnp.where((tidx > sidx)[:, :, None], expnt, -jnp.inf)
+    att = jnp.sum(r[:, None, :] * jnp.exp(expnt) * k[None, :, :], axis=-1)
+    out = out + jnp.dot(att, v, preferred_element_type=jnp.float32)
+    # diagonal u bonus
+    out = out + jnp.sum(r * k * u[None, :], axis=-1, keepdims=True) * v
+    o_ref[0, 0] = out
+    # carry: S <- exp(L_C) * S + sum_tau exp(L_C - L_tau) k_tau v_tau^T
+    wlast = linc[-1]                                       # (N,)
+    kw = k * jnp.exp(wlast[None, :] - linc)
+    s_ref[...] = (jnp.exp(wlast)[:, None] * s
+                  + jnp.dot(kw.T, v, preferred_element_type=jnp.float32))
+
+    @pl.when(tb == nt - 1)
+    def _flush():
+        sout_ref[0, 0] = s_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("bt", "interpret"))
+def wkv_chunk_kernel(r, k, v, w, u, s0, *, bt: int = 64,
+                     interpret: bool = False):
+    """Chunked parallel-scan WKV (same signature/returns as
+    :func:`wkv_kernel`; bit-different only by f32 reassociation)."""
+    B, H, T, N = r.shape
+    bt = min(bt, T)
+    assert T % bt == 0
+    nt = T // bt
+    kern = functools.partial(_wkv_chunk_kernel, bt=bt, nt=nt)
+    seq_spec = pl.BlockSpec((1, 1, bt, N), lambda b, h, t: (b, h, t, 0))
+    out, sout = pl.pallas_call(
+        kern,
+        grid=(B, H, nt),
+        in_specs=[
+            seq_spec, seq_spec, seq_spec, seq_spec,
+            pl.BlockSpec((1, N), lambda b, h, t: (h, 0)),
+            pl.BlockSpec((1, 1, N, N), lambda b, h, t: (b, h, 0, 0)),
+        ],
+        out_specs=[
+            seq_spec,
+            pl.BlockSpec((1, 1, N, N), lambda b, h, t: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, T, N), jnp.float32),
+            jax.ShapeDtypeStruct((B, H, N, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((N, N), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w, u, s0)
+    return out, sout
+
+
 def _ssd_kernel(x_ref, b_ref, c_ref, dt_ref, a_ref, s0_ref, o_ref, sout_ref,
                 s_ref, *, bt: int, nt: int):
     tb = pl.program_id(2)
@@ -121,6 +206,83 @@ def ssd_kernel(x, b, c, dt, a, s0, *, bt: int = 256, interpret: bool = False):
     assert T % bt == 0
     nt = T // bt
     kern = functools.partial(_ssd_kernel, bt=bt, nt=nt)
+    out, sout = pl.pallas_call(
+        kern,
+        grid=(B, H, nt),
+        in_specs=[
+            pl.BlockSpec((1, 1, bt, P), lambda bb, h, t: (bb, h, t, 0)),
+            pl.BlockSpec((1, bt, N), lambda bb, h, t: (bb, t, 0)),
+            pl.BlockSpec((1, bt, N), lambda bb, h, t: (bb, t, 0)),
+            pl.BlockSpec((1, 1, bt), lambda bb, h, t: (bb, h, t)),
+            pl.BlockSpec((1,), lambda bb, h, t: (h,)),
+            pl.BlockSpec((1, 1, P, N), lambda bb, h, t: (bb, h, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, bt, P), lambda bb, h, t: (bb, h, t, 0)),
+            pl.BlockSpec((1, 1, P, N), lambda bb, h, t: (bb, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, T, P), jnp.float32),
+            jax.ShapeDtypeStruct((B, H, P, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        interpret=interpret,
+    )(x, b, c, dt, a, s0)
+    return out, sout
+
+
+def _ssd_chunk_kernel(x_ref, b_ref, c_ref, dt_ref, a_ref, s0_ref, o_ref,
+                      sout_ref, s_ref, *, bt: int, nt: int):
+    tb = pl.program_id(2)
+
+    @pl.when(tb == 0)
+    def _init():
+        s_ref[...] = s0_ref[0, 0]
+
+    a = a_ref[0]                                           # scalar
+    x = x_ref[0, 0]                                        # (bt, P)
+    b = b_ref[0]                                           # (bt, N)
+    c = c_ref[0]
+    dt = dt_ref[0, 0]                                      # (bt,)
+    s = s_ref[...]                                         # (P, N)
+
+    la = dt * a
+    linc = jnp.cumsum(la)                                  # (bt,)
+    # cross-chunk: y_t reads the entry state decayed through step t
+    y = jnp.exp(linc)[:, None] * jnp.dot(
+        c, s.T, preferred_element_type=jnp.float32)        # (bt, P)
+    # intra-chunk (inclusive diagonal: output reads post-update state)
+    tidx = jax.lax.broadcasted_iota(jnp.int32, (bt, bt), 0)
+    sidx = jax.lax.broadcasted_iota(jnp.int32, (bt, bt), 1)
+    expnt = linc[:, None] - linc[None, :]
+    expnt = jnp.where(tidx >= sidx, expnt, -jnp.inf)
+    cb = jnp.dot(c, b.T, preferred_element_type=jnp.float32)
+    m = cb * jnp.exp(expnt) * dt[None, :]
+    y = y + jnp.dot(m, x, preferred_element_type=jnp.float32)
+    o_ref[0, 0] = y
+    # carry: S <- exp(L_C) * S + sum_tau exp(L_C - L_tau) dt_tau x_tau b_tau^T
+    wlast = linc[-1]
+    wgt = jnp.exp(wlast - linc) * dt                       # (bt,)
+    s_ref[...] = (jnp.exp(wlast) * s
+                  + jnp.dot((x * wgt[:, None]).T, b,
+                            preferred_element_type=jnp.float32))
+
+    @pl.when(tb == nt - 1)
+    def _flush():
+        sout_ref[0, 0] = s_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("bt", "interpret"))
+def ssd_chunk_kernel(x, b, c, dt, a, s0, *, bt: int = 64,
+                     interpret: bool = False):
+    """Chunked parallel-scan SSD (same signature/returns as
+    :func:`ssd_kernel`; bit-different only by f32 reassociation)."""
+    B, H, T, P = x.shape
+    N = b.shape[-1]
+    bt = min(bt, T)
+    assert T % bt == 0
+    nt = T // bt
+    kern = functools.partial(_ssd_chunk_kernel, bt=bt, nt=nt)
     out, sout = pl.pallas_call(
         kern,
         grid=(B, H, nt),

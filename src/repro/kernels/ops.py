@@ -10,7 +10,8 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention as _flash
-from repro.kernels.linear_scan import ssd_kernel, wkv_kernel
+from repro.kernels.linear_scan import (ssd_chunk_kernel, ssd_kernel,
+                                       wkv_chunk_kernel, wkv_kernel)
 from repro.kernels.paged_attention import paged_attention as _paged
 from repro.kernels.paged_attention import paged_attention_mq as _paged_mq
 from repro.kernels.tuned_matmul import tuned_matmul
@@ -47,19 +48,30 @@ def paged_attention_mq(q, k_pages, v_pages, block_tables, lengths, *,
                      block_k=block_k, interpret=INTERPRET)
 
 
-def wkv(r, k, v, w, u, s0, *, bt=256):
-    """Model layout (B,T,H,N) -> kernel layout (B,H,T,N) and back."""
+def wkv(r, k, v, w, u, s0, *, bt=256, mode="fused_recurrent"):
+    """Model layout (B,T,H,N) -> kernel layout (B,H,T,N) and back.
+
+    ``mode``: 'fused_recurrent' streams the sequential recurrence through
+    a VMEM-resident state; 'chunk' runs the matmul-form chunked parallel
+    scan (``bt`` is the chunk size there — default it smaller)."""
+    kern = wkv_chunk_kernel if mode == "chunk" else wkv_kernel
+    if mode == "chunk":
+        bt = min(bt, 64)
     tr = lambda t: jnp.moveaxis(t, 1, 2).astype(jnp.float32)
-    out, s = wkv_kernel(tr(r), tr(k), tr(v), tr(w), u.astype(jnp.float32),
-                        s0.astype(jnp.float32), bt=bt, interpret=INTERPRET)
+    out, s = kern(tr(r), tr(k), tr(v), tr(w), u.astype(jnp.float32),
+                  s0.astype(jnp.float32), bt=bt, interpret=INTERPRET)
     return jnp.moveaxis(out, 1, 2), s
 
 
-def ssd(x, b, c, dt, a, s0, *, bt=256):
-    """Model layout x:(B,T,H,P), dt:(B,T,H) -> kernel layout and back."""
+def ssd(x, b, c, dt, a, s0, *, bt=256, mode="fused_recurrent"):
+    """Model layout x:(B,T,H,P), dt:(B,T,H) -> kernel layout and back.
+    ``mode`` as in :func:`wkv`."""
+    kern = ssd_chunk_kernel if mode == "chunk" else ssd_kernel
+    if mode == "chunk":
+        bt = min(bt, 64)
     xk = jnp.moveaxis(x, 1, 2).astype(jnp.float32)
     dtk = jnp.moveaxis(dt, 1, 2).astype(jnp.float32)
-    y, s = ssd_kernel(xk, b.astype(jnp.float32), c.astype(jnp.float32),
-                      dtk, a.astype(jnp.float32), s0.astype(jnp.float32),
-                      bt=bt, interpret=INTERPRET)
+    y, s = kern(xk, b.astype(jnp.float32), c.astype(jnp.float32),
+                dtk, a.astype(jnp.float32), s0.astype(jnp.float32),
+                bt=bt, interpret=INTERPRET)
     return jnp.moveaxis(y, 1, 2), s

@@ -154,13 +154,29 @@ def main(argv=None):
     ap.add_argument("--spec-depth", default="auto",
                     choices=("auto", "0", "1", "2", "3", "4"),
                     help="speculative decode draft depth per pool step "
-                         "(paged pool, greedy only): N drafts per slot via "
-                         "n-gram self-lookup, verified by one multi-query "
-                         "step — greedy tokens stay bit-identical to "
-                         "non-speculative decode.  'auto' lets the "
-                         "serve-time PlanDecider pick the spec0/spec2/spec4 "
-                         "decode candidates per load bucket from occupancy-"
+                         "(greedy only): N drafts per slot via n-gram "
+                         "self-lookup, verified by one multi-query step — "
+                         "greedy tokens stay bit-identical to "
+                         "non-speculative decode.  Paged pools roll a "
+                         "rejected tail back by length truncation; "
+                         "recurrent slot pools (ssm/hybrid) by state "
+                         "snapshot/restore.  'auto' lets the serve-time "
+                         "PlanDecider pick the spec0/spec2/spec4 decode "
+                         "candidates per load bucket from occupancy-"
                          "scaled counters (requires --dtree; otherwise off)")
+    ap.add_argument("--scan-mode", default="auto",
+                    choices=("auto", "chunk", "fused_recurrent"),
+                    help="recurrent scan kernel variant for ssm/hybrid "
+                         "slot-pool families: 'chunk' runs the wkv/ssd "
+                         "recurrence as intra-chunk causal matmuls with an "
+                         "inter-chunk state carry (prefill-friendly: state "
+                         "HBM traffic drops by the chunk length), "
+                         "'fused_recurrent' is the sequential recurrence "
+                         "(decode-friendly).  Greedy output is "
+                         "bit-identical across modes.  'auto' resolves "
+                         "chunk for prefill and fused for decode, unless a "
+                         "--dtree PlanDecider picks the scan_chunk/"
+                         "scan_fused candidates per load bucket")
     ap.add_argument("--tp", default="1", choices=("1", "2", "4", "auto"),
                     help="tensor-parallel degree of the paged serve step "
                          "over the device mesh's 'model' axis: K/V pages "
@@ -254,6 +270,7 @@ def main(argv=None):
         reservation=args.reservation, mem_watermark=args.mem_watermark,
         max_preempts=args.max_preempts, prefix_cache=args.prefix_cache,
         spec_depth=-1 if args.spec_depth == "auto" else int(args.spec_depth),
+        scan_mode=args.scan_mode,
         tp=0 if args.tp == "auto" else int(args.tp),
         online_retrain=args.online_retrain,
         retrain_interval=args.retrain_interval,
@@ -262,6 +279,28 @@ def main(argv=None):
         deadline_s=args.deadline_s, max_queue=args.max_queue,
         chaos_rate=args.chaos_rate, chaos_seed=args.chaos_seed),
         dtree=dtree)
+    # explicit serve knobs must route or reject — never silently drop.
+    # Slot-pool families: chunked prefill and speculation route only for
+    # recurrent state (ssm/hybrid without a sliding window), whose
+    # fixed-size snapshots give the rollback/chunk contracts a footing.
+    recurrent = (cfg.family in ("ssm", "hybrid")
+                 and not getattr(cfg, "swa_window", 0))
+    if args.scan_mode != "auto" and not recurrent:
+        ap.error(f"--scan-mode {args.scan_mode}: only the recurrent "
+                 f"families (ssm/hybrid) have a chunk/fused kernel "
+                 f"choice; {args.arch} is family={cfg.family!r}")
+    if (args.mode == "continuous" and not engine._use_paged()
+            and not recurrent):
+        if args.prefill_chunk > 0:
+            ap.error(f"--prefill-chunk: chunked prefill on the slot pool "
+                     f"requires a recurrent family (ssm/hybrid, no "
+                     f"sliding window); {args.arch} is "
+                     f"family={cfg.family!r}")
+        if args.spec_depth not in ("auto", "0"):
+            ap.error(f"--spec-depth {args.spec_depth}: the slot pool can "
+                     f"only roll back rejected drafts via recurrent-state "
+                     f"snapshots (ssm/hybrid, no sliding window); "
+                     f"{args.arch} is family={cfg.family!r}")
     if (args.corpus_in or args.corpus_out) and engine.corpus is None:
         print("[autotune] warning: --corpus-in/--corpus-out need "
               "--online-retrain (no corpus exists without it) — ignoring")
@@ -342,6 +381,26 @@ def main(argv=None):
                   f"({pf['reclaimable_pages']} reclaimable)  "
                   f"cow={pf['cow_copies']} evictions={pf['evictions']} "
                   f"victims_spared={mem.get('shared_spared', 0)}")
+        sp = res.get("spec", {})
+        if sp.get("max_depth", 0) > 0:      # speculation actually ran
+            print(f"[spec] depth={args.spec_depth} (max used "
+                  f"{sp['max_depth']}) committed {sp['committed_tokens']} "
+                  f"tokens in {res['steps']} steps "
+                  f"-> {sp['tokens_per_step']:.2f} tokens/step")
+    elif args.mode == "continuous":
+        # slot-pool accounting parity: recurrent serves are observable
+        # (HBM footprint, occupancy high-water, speculation) like paged
+        mem = res.get("memory", {})
+        if mem.get("pool") == "slot":
+            print(f"[pool] slots={engine._pool.n_slots} "
+                  f"slot={mem['slot_bytes']/2**20:.2f} MiB "
+                  f"pool={mem['hbm_bytes']/2**20:.1f} MiB "
+                  f"high-water={mem['high_water_bytes']/2**20:.1f} MiB "
+                  f"({mem['high_water_slots']} slots)")
+        if recurrent:
+            print(f"[scan] mode={args.scan_mode} resolved: prefill="
+                  f"{engine.scan_mode_for(engine._decided_plan, 'prefill')} "
+                  f"decode={engine.scan_mode_for(engine._decided_plan)}")
         sp = res.get("spec", {})
         if sp.get("max_depth", 0) > 0:      # speculation actually ran
             print(f"[spec] depth={args.spec_depth} (max used "

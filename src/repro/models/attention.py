@@ -162,11 +162,18 @@ def init_kv_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
 
 def apply_attention_decode(cfg, p, x, cache, pos, plan: RegionPlan,
                            name: str = "attn") -> tuple[jax.Array, Any]:
-    """One-token decode against a KV cache.
+    """Decode a short block of T tokens against a KV cache.
 
-    x: (B, 1, D); cache: {"k","v"}: (B, C, KV, HD); pos: scalar int32 —
+    x: (B, T, D); cache: {"k","v"}: (B, C, KV, HD); pos: scalar int32 —
     number of tokens already in the cache (same for the whole batch).
+    T=1 is the classic single-token step (SWA rings supported); T>1
+    writes T rows at pos..pos+T-1 and attends under the staircase mask
+    (chunked state-prefill and speculative verify for slot families;
+    rings unsupported — a chunk larger than the window would wrap over
+    its own writes).
     """
+    if x.shape[1] > 1:
+        return _attention_decode_block(cfg, p, x, cache, pos, plan, name)
     with region(name) as rpath:
         B = x.shape[0]
         C = cache["k"].shape[1]
@@ -208,6 +215,50 @@ def apply_attention_decode(cfg, p, x, cache, pos, plan: RegionPlan,
         probs = jax.nn.softmax(s, axis=-1).astype(x.dtype)
         attn = jnp.einsum("bhgqk,bkhe->bqhge", probs, v)
         attn = attn.reshape(B, 1, cfg.n_heads, hd)
+        out = jnp.einsum("bshe,hed->bsd", attn, p["wo"])
+        return plan.constrain(out, rpath, ("batch", "seq", "embed")), new_cache
+
+
+def _attention_decode_block(cfg, p, x, cache, pos, plan: RegionPlan,
+                            name: str = "attn") -> tuple[jax.Array, Any]:
+    """T>1 branch of :func:`apply_attention_decode`: contiguous rows at
+    pos..pos+T-1, staircase-masked (query i sees everything through its
+    own row).  Non-ring caches only."""
+    with region(name) as rpath:
+        B, T, _ = x.shape
+        C = cache["k"].shape[1]
+        assert not (bool(cfg.swa_window) and C == cfg.swa_window), \
+            "multi-token decode unsupported on SWA ring caches"
+        positions = pos + jnp.arange(T, dtype=jnp.int32)
+        q = jnp.einsum("bsd,dhe->bshe", x, p["wq"])
+        k_new = jnp.einsum("bsd,dhe->bshe", x, p["wk"])
+        v_new = jnp.einsum("bsd,dhe->bshe", x, p["wv"])
+        if cfg.qk_norm and "q_norm" in p:
+            q = _rms(q, p["q_norm"])
+            k_new = _rms(k_new, p["k_norm"])
+        q = apply_rope(cfg, q, positions)
+        k_new = apply_rope(cfg, k_new, positions)
+
+        k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new, pos, axis=1)
+        v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new, pos, axis=1)
+        new_cache = {"k": k, "v": v}
+        k = plan.constrain(k, rpath, ("batch", "kv_seq", "kv_heads", "head_dim"))
+        v = plan.constrain(v, rpath, ("batch", "kv_seq", "kv_heads", "head_dim"))
+
+        k_pos = jnp.arange(C, dtype=jnp.int32)
+        # staircase: query i sees every cache row through its own write
+        valid = k_pos[None, :] <= positions[:, None]        # (T, C)
+        hd = q.shape[-1]
+        kvh, g = cfg.n_kv_heads, cfg.n_heads // cfg.n_kv_heads
+        qg = q.reshape(B, T, kvh, g, hd)
+        s = jnp.einsum("bshge,bkhe->bhsgk", qg, k) / math.sqrt(hd)
+        s = plan.constrain(s, rpath,
+                           ("batch", "kv_heads", None, None, "kv_seq"))
+        s = jnp.where(valid[None, None, :, None, :],
+                      s.astype(jnp.float32), NEG_INF)
+        probs = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+        attn = jnp.einsum("bhsgk,bkhe->bshge", probs, v)
+        attn = attn.reshape(B, T, cfg.n_heads, hd)
         out = jnp.einsum("bshe,hed->bsd", attn, p["wo"])
         return plan.constrain(out, rpath, ("batch", "seq", "embed")), new_cache
 

@@ -92,7 +92,8 @@ def ssd_scan(xh, bt, ct, dt, a, s0, chunk: int = 0):
     return jnp.moveaxis(ys, 0, 1), s
 
 
-def ssd_chunked(xh, bt, ct, dt, a, s0, chunk: int = 64):
+def ssd_chunked(xh, bt, ct, dt, a, s0, chunk: int = 64,
+                precise: bool = False):
     """Matmul-form SSD (Mamba2's semiseparable decomposition).
 
     Equivalent to ssd_scan, but the state is read/written once per *chunk*
@@ -100,6 +101,10 @@ def ssd_chunked(xh, bt, ct, dt, a, s0, chunk: int = 64):
     while the intra-chunk term becomes causal matmuls (MXU food).  Scalar
     per-head decay keeps every exp() argument <= 0 (no overflow), unlike
     per-channel-decay linear attention.
+
+    ``precise`` keeps the intra-chunk matmul streams in f32 (instead of
+    bf16) — the serve engine's chunk mode uses it so greedy decode stays
+    token-identical with the sequential recurrence.
 
     xh: (B,T,H,P); bt,ct: (B,T,N); dt: (B,T,H); a: (H,); s0: (B,H,P,N).
     """
@@ -112,7 +117,8 @@ def ssd_chunked(xh, bt, ct, dt, a, s0, chunk: int = 64):
     rs = lambda t: t.reshape((B, nc, C) + t.shape[2:]).swapaxes(0, 1)
     xh_c, bt_c, ct_c, dt_c = rs(xh), rs(bt), rs(ct), rs(dt)
 
-    cdt = jnp.bfloat16  # intra-chunk matmul streams (decay math stays f32)
+    # intra-chunk matmul streams (decay math stays f32 either way)
+    cdt = jnp.float32 if precise else jnp.bfloat16
 
     def chunk_step(s, inp):
         xc, bc, cc, dc = inp                     # (B,C,H,P),(B,C,N),(B,C,N),(B,C,H)
@@ -163,7 +169,15 @@ def apply_mamba(cfg, p, x, plan: RegionPlan, state=None, name: str = "ssm"):
         s0 = (s_prev if s_prev is not None
               else jnp.zeros((B, nheads, P, N), jnp.float32))
         knobs = plan.config_for(rpath)
-        if (knobs.ssm_impl or "scan") == "chunked" and T > 1:
+        # scan_mode (serve knob) outranks ssm_impl (offline knob); 'auto'
+        # is resolved to a concrete mode by the engine before planning.
+        # Serve chunk mode runs precise (f32 streams) so greedy decode is
+        # token-identical with the sequential recurrence.
+        if knobs.scan_mode == "chunk" and T > 1:
+            y, s_new = ssd_chunked(xh, bt, ct, dt, a, s0,
+                                   knobs.chunk or 64, precise=True)
+        elif (not knobs.scan_mode
+              and (knobs.ssm_impl or "scan") == "chunked" and T > 1):
             y, s_new = ssd_chunked(xh, bt, ct, dt, a, s0,
                                    knobs.chunk or 64)
         else:

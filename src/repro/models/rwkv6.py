@@ -111,6 +111,52 @@ def wkv_scan(r, k, v, w, u, s0, chunk: int = 0):
     return jnp.moveaxis(outs, 0, 1), s
 
 
+def wkv_chunked(r, k, v, w, u, s0, chunk: int = 64):
+    """Matmul-form WKV (flash-linear-attention's ``chunk`` mode).
+
+    Equivalent to :func:`wkv_scan` up to f32 reassociation: the state is
+    read/written once per *chunk* instead of once per token, and the
+    intra-chunk term becomes causal matmuls.  Per-channel decay ratios
+    live in log space and are masked *before* exponentiation, so every
+    surviving exponent is <= 0 (no overflow at any chunk size).  The
+    state r_t reads excludes kv_t (the recurrence adds kv after the
+    output), so the intra-chunk mask is strictly causal and the ``u``
+    bonus supplies the diagonal.
+    """
+    B, T, H, N = r.shape
+    C = min(chunk, T)
+    if T % C:
+        return wkv_scan(r, k, v, w, u, s0)
+    nc = T // C
+    rs = lambda t: t.reshape((B, nc, C) + t.shape[2:]).swapaxes(0, 1)
+    tidx = jnp.arange(C)
+    causal = tidx[:, None] > tidx[None, :]
+
+    def chunk_step(s, inp):
+        rc, kc, vc, wc = inp                     # (B,C,H,N)
+        lw = jnp.log(wc)
+        linc = jnp.cumsum(lw, axis=1)            # decay through step t
+        lexc = linc - lw                         # decay through step t-1
+        # cross-chunk: r_t reads the entry state decayed by w_0..w_{t-1}
+        out = jnp.einsum("bthj,bhji->bthi", rc * jnp.exp(lexc), s)
+        # intra-chunk (strictly causal)
+        expnt = lexc[:, :, None] - linc[:, None]          # (B,C,C,H,N)
+        expnt = jnp.where(causal[None, :, :, None, None], expnt, -jnp.inf)
+        att = jnp.einsum("bthj,btshj,bshj->bths", rc, jnp.exp(expnt), kc)
+        out = out + jnp.einsum("bths,bshi->bthi", att, vc)
+        # diagonal u bonus
+        out = out + jnp.einsum("bthj,hj->bth", rc * kc, u)[..., None] * vc
+        # carry: S <- exp(L_C) * S + sum_tau exp(L_C - L_tau) k_tau v_tau^T
+        wlast = linc[:, -1]                               # (B,H,N)
+        kw = kc * jnp.exp(wlast[:, None] - linc)
+        s = (jnp.exp(wlast)[..., :, None] * s
+             + jnp.einsum("bthj,bthi->bhji", kw, vc))
+        return s, out
+
+    s, ys = jax.lax.scan(chunk_step, s0, tuple(rs(t) for t in (r, k, v, w)))
+    return ys.swapaxes(0, 1).reshape(B, T, H, N), s
+
+
 def _group_norm(p, x, h, n, eps=1e-5):
     """Per-head LayerNorm on the WKV output (RWKV's ln_x). x: (B,T,D)."""
     B, T, D = x.shape
@@ -147,10 +193,17 @@ def apply_tmix(cfg, p, x, plan: RegionPlan, state=None, name: str = "tmix"):
 
         s0 = (state["s"] if state is not None
               else jnp.zeros((B, h, n, n), jnp.float32))
-        chunk = plan.config_for(rpath).chunk
-        out, s_new = wkv_scan(r.astype(jnp.float32), k.astype(jnp.float32),
-                              v.astype(jnp.float32), w,
-                              p["u"].astype(jnp.float32), s0, chunk)
+        knobs = plan.config_for(rpath)
+        # scan_mode 'chunk' = matmul-form parallel scan (prefill-optimal);
+        # anything else = the exact sequential recurrence ('auto' is
+        # resolved to a concrete mode by the serve engine before planning)
+        scan_fn = (wkv_chunked if knobs.scan_mode == "chunk" and T > 1
+                   else wkv_scan)
+        out, s_new = scan_fn(r.astype(jnp.float32), k.astype(jnp.float32),
+                             v.astype(jnp.float32), w,
+                             p["u"].astype(jnp.float32), s0,
+                             knobs.chunk or (64 if scan_fn is wkv_chunked
+                                             else 0))
         out = out.reshape(B, T, D).astype(x.dtype)
         out = _group_norm(p, out, h, n) * jax.nn.silu(g)
         y = jnp.einsum("btd,de->bte", out, p["wo"])
@@ -249,7 +302,8 @@ def decode_step(cfg, params, cache, tokens, plan: RegionPlan, *,
         new_states[f"l{li}"] = st2
     x = L.apply_norm(cfg, params["final_norm"], x)
     logits = L.apply_unembed(cfg, params["embed"], x, plan)
-    return logits, {"layers": new_states, "pos": cache["pos"] + 1}
+    return logits, {"layers": new_states,
+                    "pos": cache["pos"] + tokens.shape[1]}
 
 
 def prefill(cfg, params, batch, plan: RegionPlan, max_len: int):

@@ -21,7 +21,7 @@ from repro.models import mamba2
 
 
 def n_attn_sites(cfg) -> int:
-    return cfg.n_layers // cfg.attn_every
+    return cfg.n_layers // cfg.attn_every if cfg.attn_every else 0
 
 
 def layer_spec(cfg) -> Any:
@@ -155,7 +155,8 @@ def decode_step(cfg, params, cache, tokens, plan: RegionPlan, *,
             site += 1
     x = L.apply_norm(cfg, params["final_norm"], x)
     logits = L.apply_unembed(cfg, params["embed"], x, plan)
-    return logits, {"ssm": new_ssm, "kv": new_kv, "pos": pos + 1}
+    return logits, {"ssm": new_ssm, "kv": new_kv,
+                    "pos": pos + tokens.shape[1]}
 
 
 def prefill(cfg, params, batch, plan: RegionPlan, max_len: int):

@@ -873,6 +873,9 @@ class SlotKVPool:
         self._free = list(range(n_slots - 1, -1, -1))   # pop() -> slot 0 first
         self._active: set[int] = set()
         self._write = jax.jit(_splice, donate_argnums=(0,))
+        self._read = jax.jit(
+            lambda pool, slot: jax.tree.map(lambda p: p[slot], pool))
+        self.high_water = 0                     # peak live slots
 
     # -- slot accounting -----------------------------------------------------
     @property
@@ -889,6 +892,7 @@ class SlotKVPool:
             return None
         slot = self._free.pop()
         self._active.add(slot)
+        self.high_water = max(self.high_water, len(self._active))
         return slot
 
     def free(self, slot: int) -> None:
@@ -909,7 +913,44 @@ class SlotKVPool:
         return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
                             self.slot_avals)
 
+    def read(self, slot: int) -> Any:
+        """Gather one slot's cache out of the pool (device-side slice into
+        fresh buffers — safe across later donating :meth:`write` calls)."""
+        return self._read(self.pool, jnp.asarray(slot, jnp.int32))
+
+    # -- speculative snapshot/restore ----------------------------------------
+    # A recurrence has no length-truncation rollback: rejected draft tokens
+    # are already folded into the state.  The speculative contract for slot
+    # families is therefore copy-before-verify: ``snapshot`` captures the
+    # slot's fixed-size state (O(state), independent of context length —
+    # cheaper than the paged analogue for long contexts), ``restore``
+    # splices it back after a rejection, and the engine re-advances only
+    # the accepted tokens through the exact sequential recurrence.
+    def snapshot(self, slot: int) -> Any:
+        """O(state) copy of a slot's cache, taken before a verify step."""
+        if slot not in self._active:
+            raise ValueError(f"slot {slot} is not allocated")
+        return self.read(slot)
+
+    def restore(self, slot: int, snap: Any) -> None:
+        """Splice a snapshot back: state after a rejected draft is exactly
+        the state before the draft."""
+        self.write(slot, snap)
+
+    # -- memory accounting ---------------------------------------------------
+    def slot_bytes(self) -> int:
+        """Bytes of one resident slot's cache across all leaves."""
+        return self.hbm_bytes() // self.n_slots
+
     def hbm_bytes(self) -> int:
         """Total pool footprint (KV leaves only, the growable part)."""
         return int(sum(int(np.prod(l.shape)) * l.dtype.itemsize
                        for l in jax.tree.leaves(self.pool)))
+
+    def high_water_bytes(self) -> int:
+        """Peak bytes of *live* slots — the trace's real state working set
+        (the pool itself is fixed-shape; this is the occupancy peak)."""
+        return self.slot_bytes() * self.high_water
+
+    def reset_high_water(self) -> None:
+        self.high_water = len(self._active)

@@ -163,10 +163,22 @@ class ServeConfig:
                                 # prompt in one chunk)
     prefill_chunks_per_step: int = 1   # prefill chunks interleaved between
                                        # consecutive pool decode steps
-    # -- speculative decode (paged pool, greedy only) ------------------------
+    # -- speculative decode (greedy only; paged pool or recurrent slots) -----
     spec_depth: int = -1        # draft tokens per pool step: -1 = auto (the
                                 # plan's attn-region spec_depth knob, the
                                 # PlanDecider's channel); 0 = off; N>0 fixed
+    # -- recurrent scan mode (slot pool, ssm/hybrid families) ----------------
+    scan_mode: str = "auto"     # wkv/ssd kernel variant: "chunk" (parallel
+                                # intra-chunk matmuls, prefill-friendly) /
+                                # "fused_recurrent" (sequential recurrence,
+                                # decode-friendly) pin it for BOTH phases;
+                                # "auto" = the plan's scan-region scan_mode
+                                # knob (the PlanDecider's scan_chunk /
+                                # scan_fused channel; unset = chunk for
+                                # prefill, fused for decode).  Greedy output
+                                # is bit-identical across modes — this knob
+                                # trades state-traffic against matmul shape
+                                # per load bucket, never tokens.
     # -- tensor parallelism (mesh-sharded paged serving) ---------------------
     tp: int = 0                 # tensor-parallel degree over the mesh
                                 # "model" axis (pages shard on kv_heads,
@@ -291,8 +303,15 @@ class Engine:
         self._paged = False
         self.governor = None                        # paged memory governor
         self._build_step = None                     # plan -> compiled step
-        self._slot_prefills: dict[int, Any] = {}    # feed_len -> jitted fn
+        self._slot_prefills: dict = {}              # (feed_len, scan_mode)
+                                                    # -> jitted prefill fn
         self._chunk_step = None                     # paged prefill-chunk fn
+        self._slot_chunks: dict = {}                # (width, scan_mode) ->
+                                                    # jitted slot chunk fn
+        self._decided_plan = self.plan              # last decider output —
+                                                    # prefill-phase knobs
+                                                    # (scan_mode) resolve
+                                                    # against it at call time
         self._pool_steps: dict = {}                 # key -> (compiled, depth,
                                                     #         tp)
         self._pool_step = None
@@ -453,14 +472,28 @@ class Engine:
         rc = self.plan.config_for("layer0/attn")
         return self.cfg.page_size or rc.page_size or 16
 
+    def _spec_pool_ok(self) -> bool:
+        """Whether the live pool can roll back a rejected draft: the paged
+        pool truncates lengths (O(1)); the slot pool can snapshot/restore
+        *fixed-size recurrent state* (ssm/hybrid — O(state), no context
+        dependence).  A sliding-window ring absorbs multi-token writes
+        destructively mid-ring and a growing slot KV cache has no
+        truncation analogue, so those slot families never speculate."""
+        if self._paged:
+            return True
+        cfg = self.model.cfg
+        return (getattr(cfg, "family", "") in ("ssm", "hybrid")
+                and not getattr(cfg, "swa_window", 0))
+
     def _spec_knob_live(self) -> bool:
         """Whether spec_depth is the PlanDecider's to choose: only in auto
         mode (ServeConfig.spec_depth < 0), greedy sampling (speculative
         verification is an argmax-chain identity — under temperature it
-        would change the sampling distribution), and non-MoE (capacity
+        would change the sampling distribution), non-MoE (capacity
         groups route by token-group length, so a multi-token step would
-        route differently than sequential decode and break bit-identity)."""
-        return (self._paged and self.cfg.spec_depth < 0
+        route differently than sequential decode and break bit-identity),
+        and on a pool that can roll a rejected draft back."""
+        return (self._spec_pool_ok() and self.cfg.spec_depth < 0
                 and self.cfg.temperature <= 0
                 and not self.model.cfg.n_experts)
 
@@ -469,14 +502,58 @@ class Engine:
         ServeConfig value pins it; in auto mode the plan's attn-region knob
         (the tuner/PlanDecider channel) decides; unset means off.  A
         degraded engine (``_force_safe``) pins 0 ahead of everything —
-        the safe plan outranks even an explicit ServeConfig pin."""
+        the safe plan outranks even an explicit ServeConfig pin — and a
+        pool with no rollback pins 0 regardless of any pin."""
         if self._force_safe:
             return 0
         if self.cfg.temperature > 0 or self.model.cfg.n_experts:
             return 0
+        if not self._spec_pool_ok():
+            return 0
         if self.cfg.spec_depth >= 0:
             return self.cfg.spec_depth
         return max(plan.config_for("layer0/attn").spec_depth, 0)
+
+    # -- recurrent scan-mode resolution (slot pool, ssm/hybrid) --------------
+    def _scan_region(self) -> str:
+        """The region whose scan_mode knob steers the recurrent kernels:
+        rwkv6's time-mix for the ssm family, the mamba block for hybrid."""
+        fam = getattr(self.model.cfg, "family", "")
+        return "layer0/tmix" if fam == "ssm" else "layer0/ssm"
+
+    def scan_mode_for(self, plan: RegionPlan, phase: str = "decode") -> str:
+        """scan_mode resolution (same precedence as the other serve knobs):
+        an explicit ServeConfig value pins it; in auto mode the plan's
+        scan-region knob (the PlanDecider's scan_chunk/scan_fused channel)
+        decides; unset falls through to the phase heuristic — "chunk" for
+        prefill (intra-chunk work becomes causal matmuls, state traffic
+        drops by the chunk length), "fused_recurrent" for decode (a one-
+        token step has no intra-chunk parallelism to win).  Returns ""
+        for families without the choice (the plan is left untouched)."""
+        cfg = self.model.cfg
+        if self._paged or getattr(cfg, "family", "") not in ("ssm", "hybrid"):
+            return ""
+        mode = self.cfg.scan_mode
+        if mode not in ("chunk", "fused_recurrent"):
+            mode = plan.config_for(self._scan_region()).scan_mode or "auto"
+        if mode == "auto":
+            mode = "chunk" if phase == "prefill" else "fused_recurrent"
+        return mode
+
+    def _plan_with_scan_mode(self, plan: RegionPlan, mode: str) -> RegionPlan:
+        """The plan a recurrent step/prefill lowers under: the decided
+        plan's knobs with the scan region's mode pinned to the RESOLVED
+        choice, so "auto" never reaches the model code (mirrors
+        :meth:`_safe_plan`'s overlay pattern)."""
+        if not mode:
+            return plan
+        import copy
+        plan2 = copy.deepcopy(plan)
+        rkey = ("layer/tmix" if getattr(self.model.cfg, "family", "") == "ssm"
+                else "layer/ssm")
+        base = plan2.region_configs.get(rkey, RegionConfig())
+        plan2.region_configs[rkey] = dataclasses.replace(base, scan_mode=mode)
+        return plan2
 
     def reservation_for(self, plan: RegionPlan) -> str:
         """Memory-reservation resolution, mirroring :meth:`spec_depth_for`:
@@ -692,26 +769,53 @@ class Engine:
         return jnp.where(active, sample_rows(logits, key, temp), 0)
 
     def _build_pool_step(self, plan: RegionPlan):
-        """AOT-compile one decode+sample step over the whole slot pool.
-        Returns (compiled, spec_depth=0, tp=1) — the slot pool (recurrent
-        state / rings) has no multi-token rollback, so it never
-        speculates, and no page axis to shard, so it never tensor-
-        parallelises."""
+        """AOT-compile one decode(+verify)+sample step over the whole slot
+        pool: the model's single-request ``decode_step`` vmapped over the
+        slot axis.
+
+        The plan's resolved ``spec_depth`` D sets the step's fixed query
+        width S = D+1 exactly as on the paged pool — tokens (B, S) carry
+        each slot's pending token followed by its drafted continuation and
+        the returned (B, S) grid is the argmax chain the host's acceptance
+        walk compares drafts against.  Only recurrent families (ssm /
+        hybrid) resolve D > 0: their fixed-size state snapshots in
+        :class:`SlotKVPool` make the rejection rollback O(state) (see
+        ``_serve_slots``); D=0 degenerates to the plain one-token step,
+        bit-for-bit the pre-speculation path.
+
+        The plan's resolved ``scan_mode`` is baked into the plan the step
+        lowers under (:meth:`_plan_with_scan_mode`), so a chunk/fused flip
+        is a step-cache entry, never a retrace of a live executable.
+
+        Carries the same always-on health guard as the paged step: a
+        per-slot ``finite`` flag over the S logit rows, inactive slots
+        forced healthy.  No page axis to shard, so tp is always 1.
+        Returns (compiled, D, tp=1); the compiled step returns
+        ``(tokens (B,S), finite (B,), pool)``."""
         model, temp = self.model, self.cfg.temperature
         sample = self._sample_pool
+        depth = self.spec_depth_for(plan)
+        S = depth + 1
+        splan = self._plan_with_scan_mode(plan, self.scan_mode_for(plan))
 
         def step(params, pool, tokens, active, key):
-            def one(cache, tok):
+            def one(cache, toks):
                 logits, new_cache = model.decode(params, cache,
-                                                 tok[None, None], plan)
-                return logits[0, -1, :].astype(jnp.float32), new_cache
-            logits, pool = jax.vmap(one)(pool, tokens)
-            return sample(logits, active, key, temp)[:, None], pool
+                                                 toks[None, :], splan)
+                return logits[0].astype(jnp.float32), new_cache
+            logits, pool = jax.vmap(one)(pool, tokens)      # (B, S, V)
+            B, S_, V = logits.shape
+            flat = logits.reshape(B * S_, V)
+            act = jnp.repeat(active, S_)
+            finite = (jnp.isfinite(flat).all(axis=-1).reshape(B, S_)
+                      .all(axis=-1) | ~active)
+            return sample(flat, act, key, temp).reshape(B, S_), finite, pool
 
         B = self._pool.n_slots
         return jax.jit(step, donate_argnums=(1,)).lower(
-            self.params, self._pool.pool, jnp.zeros((B,), jnp.int32),
-            jnp.zeros((B,), jnp.bool_), jax.random.PRNGKey(0)).compile(), 0, 1
+            self.params, self._pool.pool, jnp.zeros((B, S), jnp.int32),
+            jnp.zeros((B,), jnp.bool_),
+            jax.random.PRNGKey(0)).compile(), depth, 1
 
     def _build_paged_step(self, plan: RegionPlan):
         """AOT-compile one decode(+verify)+sample step over the paged pool:
@@ -815,10 +919,33 @@ class Engine:
                                        out_shardings=out_sh)
         return self._chunk_step
 
+    def _slot_chunk_fn(self, width: int, mode: str):
+        """Jitted slot-pool prefill-chunk / re-advance step: fold ``width``
+        tokens into one request's single-slot cache (state donated, logits
+        discarded).  One executable per (width, scan-mode) — exact widths,
+        because right-padding is unsound for recurrent state (the
+        recurrence would absorb the pads); jit's shape-keyed cache would
+        key the widths anyway, the dict just makes the mode explicit."""
+        fn = self._slot_chunks.get((width, mode))
+        if fn is None:
+            model = self.model
+            splan = self._plan_with_scan_mode(self.plan, mode)
+
+            def chunk_step(params, cache, tokens):
+                _, cache = model.decode(params, cache, tokens, splan)
+                return cache
+
+            fn = jax.jit(chunk_step, donate_argnums=(1,))
+            self._slot_chunks[(width, mode)] = fn
+        return fn
+
     def _prefill_slot(self, prompt: np.ndarray):
         """Fill a fresh single-request cache with prompt[:-1]; the last
         prompt token is returned to be fed through the pool decode step
-        (which then yields the first generated token)."""
+        (which then yields the first generated token).  Recurrent families
+        prefill under the resolved prefill-phase scan mode (chunk by
+        default: the whole-prompt scan is exactly where the intra-chunk
+        matmul form wins)."""
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         if prompt.size < 2:
             return self._pool.empty_slot_cache(), int(prompt[-1])
@@ -829,17 +956,20 @@ class Engine:
             padded = min(-(-true_len // b) * b, self.cfg.max_len)
             if padded > true_len:
                 feed = np.pad(feed, (0, padded - true_len))
-        fn = self._slot_prefills.get(feed.size)
+        mode = self.scan_mode_for(self._decided_plan, phase="prefill")
+        fn = self._slot_prefills.get((feed.size, mode))
         if fn is None:
+            plan = self._plan_with_scan_mode(self.plan, mode)
+
             def pf(params, tokens, true_len):
                 _, cache = self.model.prefill(
-                    params, {"tokens": tokens}, self.plan,
+                    params, {"tokens": tokens}, plan,
                     max_len=self.cfg.max_len)
                 cache = dict(cache)
                 cache["pos"] = jnp.asarray(true_len, jnp.int32)
                 return cache
             fn = jax.jit(pf)
-            self._slot_prefills[feed.size] = fn
+            self._slot_prefills[(feed.size, mode)] = fn
         cache = fn(self.params, jnp.asarray(feed)[None],
                    jnp.asarray(true_len, jnp.int32))
         return cache, int(prompt[-1])
@@ -906,6 +1036,10 @@ class Engine:
                                      self.mem_watermark_for(plan),
                                      max_preempts=self.cfg.max_preempts)
             self._pool.prefix_enabled = self.prefix_cache_for(plan)
+        # prefill-phase knobs (slot scan_mode) resolve against the decided
+        # (or explored) plan at call time — prefill fns are jit-cached per
+        # mode, so a flip retraces nothing that already compiled
+        self._decided_plan = plan
         key = self._step_cache_key(plan)
         if key not in self._pool_steps:
             self._pool_steps[key] = self._build_step(plan)
@@ -1043,6 +1177,9 @@ class Engine:
             # below: tp4 clamped to 2 on a 2-device host must share the
             # tp2 executable, not mint a third identical compile
             rc.pop("tp_degree", None)
+            # likewise scan_mode: "auto" and a concrete mode that resolves
+            # identically must share one executable
+            rc.pop("scan_mode", None)
         if self._paged:
             raw["tp"] = self.tp_for(plan)
             # the resolved depth rides alongside for the same reason —
@@ -1051,6 +1188,13 @@ class Engine:
             # pins depth 0, and its safe step must never collide with
             # the healthy executable cached for the same plan
             raw["spec"] = self.spec_depth_for(plan)
+        else:
+            # the slot pool's step is shaped by the resolved draft depth
+            # (query width S = D+1) and lowers under the resolved decode
+            # scan mode — both cache-key, neither recompiles when a dtree
+            # decision couldn't change the executable
+            raw["spec"] = self.spec_depth_for(plan)
+            raw["scan"] = self.scan_mode_for(plan)
         return _json.dumps(raw, sort_keys=True)
 
     def _validate(self, req: Request):
@@ -1216,32 +1360,98 @@ class Engine:
         return consumed
 
     def _serve_slots(self, sched: Scheduler) -> dict:
-        """The slot-pool loop: whole-prompt prefill on admission, vmapped
-        decode over whole-cache slots."""
+        """The slot-pool loop: vmapped decode over whole-cache slots, with
+        the recurrent families now first-class citizens of continuous
+        batching.
+
+        **Chunked state prefill** (``prefill_chunk`` > 0): a prompt no
+        longer prefills whole on admission — the request binds mid-prefill
+        (the scheduler's PREFILL lifecycle, exactly as on the paged pool),
+        its state accumulates in a host-held single-slot cache fed
+        ``prefill_chunk`` tokens at a time, and at most
+        ``prefill_chunks_per_step`` chunks run between consecutive pool
+        decode steps.  A long prompt is spread across many steps instead
+        of head-of-line blocking every in-flight decode.  The chunk fn
+        runs under the resolved *prefill-phase* scan mode (chunk by
+        default — the wkv/ssd chunked kernels turn the intra-chunk work
+        into causal matmuls), while the decode step keeps its own mode.
+
+        **Speculative decode on recurrent state** (resolved ``spec_depth``
+        D > 0, greedy only): drafts come from :func:`draft_ngram` as on
+        the paged pool and one fixed-shape S = D+1 verify step scores
+        every slot at once.  A recurrence has no length-truncation
+        rollback — rejected drafts are already folded into the state — so
+        the rollback contract is **snapshot/restore**: each speculating
+        slot's fixed-size state is copied before the verify step
+        (O(state), independent of context length) and, on rejection,
+        restored and re-advanced over exactly the inputs whose outputs
+        committed.  Greedy output stays bit-identical to the
+        non-speculative path.
+
+        Faulted slots (non-finite logits, or chaos-injected) follow the
+        paged pool's retry ladder: commit nothing, restore the pre-step
+        snapshot when one exists, and fail terminally past
+        ``max_retries``."""
         pool = self._pool
-        pending = np.zeros((pool.n_slots,), np.int32)
-        active = np.zeros((pool.n_slots,), bool)
+        B = pool.n_slots
+        pending = np.zeros((B,), np.int32)
+        active = np.zeros((B,), bool)
+        prefills: list[Request] = []        # admitted, mid-prefill (FIFO)
+        pcaches: dict[int, Any] = {}        # slot -> host-held prefill cache
         key = jax.random.PRNGKey(self.cfg.seed)
         t0 = time.perf_counter()
         now = lambda: time.perf_counter() - t0  # noqa: E731
         steps = 0
+        committed_total = 0                 # tokens committed by decode steps
+        slot_steps = 0                      # sum of stepped slots over steps
+        max_depth = 0                       # deepest speculation actually run
 
         while not sched.done():
             t = now()
             # admit: every free slot takes the next arrived request (FIFO)
             while pool.n_free and sched.has_ready(t):
                 req = sched.pop_ready(t)
+                hist = req.token_history()
                 slot = pool.alloc()
-                cache, first_tok = self._prefill_slot(req.prompt)
-                pool.write(slot, cache)
-                pending[slot] = first_tok
-                sched.bind(req, slot, now())
-                active[slot] = True
+                if self.cfg.prefill_chunk > 0 and hist.size >= 2:
+                    sched.bind_prefill(req, slot, now())
+                    pcaches[slot] = pool.empty_slot_cache()
+                    req.prefill_pos = 0
+                    prefills.append(req)
+                else:
+                    cache, first_tok = self._prefill_slot(hist)
+                    pool.write(slot, cache)
+                    pending[slot] = first_tok
+                    sched.bind(req, slot, now())
+                    active[slot] = True
             # deadline/queue shedding applies to the slot path too — the
             # policy is scheduler-level, not a paged-pool feature
             sched.shed_waiting(now(), self.cfg.max_queue,
                                self.cfg.deadline_s)
+
+            # interleaved chunked prefill: a bounded budget per loop pass
+            budget = max(self.cfg.prefill_chunks_per_step, 1)
+            pmode = self.scan_mode_for(self._decided_plan, phase="prefill")
+            while budget > 0 and prefills:
+                req = prefills[0]
+                slot = req.slot
+                feed = req.token_history()[:-1]
+                chunk = feed[req.prefill_pos:
+                             req.prefill_pos + self.cfg.prefill_chunk]
+                pcaches[slot] = self._slot_chunk_fn(chunk.size, pmode)(
+                    self.params, pcaches[slot], jnp.asarray(chunk)[None])
+                budget -= 1
+                req.prefill_pos += chunk.size
+                if req.prefill_pos >= feed.size:
+                    pool.write(slot, pcaches.pop(slot))
+                    pending[slot] = int(req.token_history()[-1])
+                    sched.start_decode(req)
+                    active[slot] = True
+                    prefills.pop(0)
+
             if not sched.active:
+                if prefills:
+                    continue                # keep prefilling
                 nxt = sched.next_arrival()
                 if nxt is None:
                     break
@@ -1253,18 +1463,105 @@ class Engine:
             n_act = len(sched.active)
             self._maybe_replan(n_act)
             t_step0 = time.perf_counter()
+            D = self._spec_depth
+            S = D + 1
+            max_depth = max(max_depth, D)
+            dmode = self.scan_mode_for(self._decided_plan)
+
+            toks_in = np.zeros((B, S), np.int32)
+            toks_in[:, 0] = pending
+            # snapshots make faults (and rejected drafts) recoverable; at
+            # D=0 with no injector a non-finite retry would recompute the
+            # identical garbage anyway, so the copies are skipped
+            snaps: dict[int, Any] = {}
+            if D or self.faults is not None:
+                for slot, req in sched.active.items():
+                    if D:
+                        toks_in[slot, 1:] = draft_ngram(req.token_history(),
+                                                        D)
+                    snaps[slot] = pool.snapshot(slot)
             key, sub = jax.random.split(key)
-            toks, pool.pool = self._pool_step(
-                self.params, pool.pool, jnp.asarray(pending),
+            out, finite, pool.pool = self._pool_step(
+                self.params, pool.pool, jnp.asarray(toks_in),
                 jnp.asarray(active), sub)
             steps += 1
-            consumed = self._commit_tokens(sched, np.asarray(toks),
-                                           np.ones((pool.n_slots,), np.int32),
-                                           pending, active, now(),
+            out_np = np.asarray(out)
+            finite_np = np.asarray(finite)
+
+            # per-step health guard + acceptance walk (paged semantics on
+            # the slot pool): a faulted slot commits nothing and retries
+            # from its pre-step snapshot; draft i is valid iff it equals
+            # the verify argmax after draft i-1 (and every earlier draft
+            # held) — the longest such prefix commits
+            faulted: set[int] = set()
+            for slot in list(sched.active):
+                if not bool(finite_np[slot]):
+                    faulted.add(slot)
+            if self.faults is not None:
+                for slot in list(sched.active):
+                    if slot not in faulted and self.faults.fire("logits.nan"):
+                        faulted.add(slot)
+            n_cand = np.ones((B,), np.int32)
+            slot_steps += len(sched.active)
+            for slot in list(sched.active):
+                req = sched.active[slot]
+                if slot in faulted:
+                    n_cand[slot] = 0
+                    req.retries += 1
+                    req.fail_streak += 1
+                    had_snap = slot in snaps
+                    if had_snap:
+                        pool.restore(slot, snaps.pop(slot))
+                    if (req.fail_streak > self.health.policy.max_retries
+                            or not had_snap):
+                        # no snapshot means no injector and no drafts: the
+                        # NaN is the model's own deterministic blowup — a
+                        # retry would recompute it bit for bit
+                        pool.free(slot)
+                        active[slot] = False
+                        pending[slot] = 0
+                        sched.fail(req, now(),
+                                   "non-finite logits on slot pool")
+                    continue
+                req.fail_streak = 0
+                a = 0
+                while a < D and toks_in[slot, a + 1] == out_np[slot, a]:
+                    a += 1
+                n_cand[slot] = a + 1
+            consumed = self._commit_tokens(sched, out_np, n_cand, pending,
+                                           active, now(),
                                            lambda slot, _req: pool.free(slot))
-            self._tap_step(n_act, sum(consumed.values()),
-                           time.perf_counter() - t_step0)
-        return {"steps": steps}
+            committed_total += sum(consumed.values())
+            if D:
+                for slot, c in consumed.items():
+                    if slot in sched.active and c < S:
+                        # rejected tail: the state already absorbed the bad
+                        # drafts — splice the pre-step snapshot back through
+                        # a re-advance over exactly the c accepted inputs,
+                        # the state a sequential decode of the committed
+                        # tokens would hold (the snapshot is donated; it is
+                        # dead after this)
+                        pool.write(slot, self._slot_chunk_fn(c, dmode)(
+                            self.params, snaps[slot],
+                            jnp.asarray(toks_in[slot, :c])[None]))
+            dt_step = time.perf_counter() - t_step0
+            self.health.note_step(dt_step, n_slot_faults=len(faulted))
+            self._tap_step(n_act, sum(consumed.values()), dt_step)
+        return {"steps": steps,
+                "spec": {"committed_tokens": committed_total,
+                         "slot_steps": slot_steps,
+                         "max_depth": max_depth,
+                         "accepted_drafts": committed_total - slot_steps,
+                         "tokens_per_step":
+                             committed_total / max(steps, 1)},
+                # accounting parity with the paged pool: recurrent serves
+                # are observable (HBM footprint, occupancy high-water) like
+                # paged ones
+                "memory": {"pool": "slot",
+                           "slot_bytes": pool.slot_bytes(),
+                           "hbm_bytes": pool.hbm_bytes(),
+                           "high_water_slots": pool.high_water,
+                           "high_water_bytes": pool.high_water_bytes()}}
 
     def _serve_paged(self, sched: Scheduler) -> dict:
         """The paged-pool loop: governor-mediated admission, prompt prefill

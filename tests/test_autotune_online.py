@@ -286,7 +286,8 @@ def test_explorer_menu_is_the_serve_only_classes():
         "spec0", "spec2", "spec4",
         "mem_full", "mem_lazy", "mem_lazy_wm10", "mem_lazy_wm30",
         "mem_prefix_on", "mem_prefix_off",
-        "tp1", "tp2", "tp4"}
+        "tp1", "tp2", "tp4",
+        "scan_chunk", "scan_fused", "scan_chunk_ssd", "scan_fused_ssd"}
     assert all(c.serve_only for c in explore_menu())
     # the watermark variants carry their fraction on the config
     wm = {c.name: c.config.mem_watermark for c in explore_menu()

@@ -232,7 +232,9 @@ def test_continuous_bucketed_prefill_matches_exact(engine):
     for i, r in enumerate(reqs):
         assert r.out_tokens == static[i].tolist()
     # 13-token prompts feed 12 tokens -> one 16-wide bucket, one jit entry
-    assert list(eng_b._slot_prefills) == [16]
+    # (keyed on (feed_len, resolved scan mode); attention families have
+    # no scan-mode choice, so the mode half is empty)
+    assert list(eng_b._slot_prefills) == [(16, "")]
 
 
 def test_paged_is_default_for_full_kv(engine):
