@@ -78,6 +78,15 @@ counter-trained scan tree must vote the chunk class on low-occupancy
 ``ratios.recurrent_chunk_vs_fused_prefill``; ``--recurrent-only`` runs
 just this section.
 
+The **observability rows** replay the mixed-length trace on two engines,
+telemetry off (the one-``is not None`` disabled path) vs fully on at
+``debug`` level (span tracer + metrics ring + latency sketches +
+per-step events), asserting bit-identical greedy tokens, loadable
+Chrome-trace / parseable Prometheus exports, and telemetry-on tok/s
+>= 0.97x off.  Gated by CI's ``obs-smoke`` job via
+``ratios.telemetry_on_vs_off_tok_s``; ``--obs-only`` runs just this
+section.
+
 Row format: ``name,us_per_token,tok_per_s`` (plus derived ratio rows).
 After a run, :data:`json_summary` holds the machine-readable record
 (tok/s, latency percentiles, TTFT for every path, HBM high-water,
@@ -179,6 +188,10 @@ GEN_RC_D = 32                  # answers — all slots decoding at once, the
                                # regime where the sequential recurrence wins
 SLOTS_RC = 3
 CHUNK_RC = 16                  # auto engine's interleaved state-prefill chunk
+
+# -- observability section (telemetry-on vs telemetry-off overhead) ----------
+OBS_GATE = 0.97                # telemetry-on tok/s must stay within 3% of off
+OBS_LEVEL = "debug"            # worst case: per-step events + span tracing
 
 # -- chaos section (fault-injected serving: retries, fallback, shedding) -----
 PROMPT_CH = 12
@@ -706,6 +719,87 @@ def _chaos_section(model, params, vocab: int) -> tuple[list, dict]:
     return rows, sec
 
 
+def _obs_section(model, params, vocab: int, reps: int = 3) -> tuple[list, dict]:
+    """Telemetry overhead: two engines replay the identical mixed-length
+    trace, one with the telemetry subsystem off (the ``is not None``
+    disabled path) and one fully on at ``debug`` level (span tracer +
+    metrics ring + latency sketches + per-step structured events — the
+    worst case).  Gates (CI's ``obs-smoke`` job, via
+    ``ratios.telemetry_on_vs_off_tok_s``): greedy tokens bit-identical,
+    telemetry-on tok/s >= ``OBS_GATE`` x off, and the exporters actually
+    produce a loadable Chrome trace + parseable Prometheus text.
+    Best-of-``reps`` on both sides: sub-ms CPU steps are jitter-prone and
+    the gate should measure the recording hooks, not the scheduler."""
+    common = dict(max_len=PROMPT + max(GENS) + 1, max_slots=SLOTS,
+                  page_size=PAGE, prefill_chunk=CHUNK, spec_depth=0)
+    off_eng = Engine(model, params, serve_cfg=ServeConfig(**common))
+    on_eng = Engine(model, params, serve_cfg=ServeConfig(
+        **common, telemetry=True, log_level=OBS_LEVEL))
+    base = _trace(vocab)
+    off_eng.serve(_reset(base))            # warm: compile chunk fns + steps
+    on_eng.serve(_reset(base))
+    reqs_off, s_off, _ = _best_of(off_eng, base, reps)
+    reqs_on, s_on, res_on = _best_of(on_eng, base, reps)
+    for a, b in zip(reqs_on, reqs_off):
+        assert a.out_tokens == b.out_tokens, (
+            f"telemetry changed request {a.rid}'s greedy tokens")
+    ratio = s_on["tok_per_s"] / max(s_off["tok_per_s"], 1e-9)
+
+    # the exporters must produce consumable artifacts, not just bytes
+    trace = on_eng.telemetry.chrome_trace()
+    evs = trace["traceEvents"]
+    assert evs, "telemetry-on serve produced an empty span trace"
+    for ev in evs:
+        assert {"ph", "pid", "tid", "name"} <= set(ev), f"bad event {ev}"
+        assert ev["ph"] == "M" or "ts" in ev, f"timeless event {ev}"
+        assert ev["ph"] != "X" or "dur" in ev, f"X event without dur {ev}"
+    kinds = {e["name"] for e in evs if e["ph"] != "M"}
+    assert {"QUEUED", "PREFILL", "DECODE"} <= kinds, (
+        f"lifecycle span kinds missing from trace: {sorted(kinds)}")
+    json.loads(json.dumps(trace))          # round-trips as JSON
+    prom = on_eng.metrics_text()
+    for line in prom.splitlines():
+        if line.startswith("#"):
+            assert line.startswith(("# TYPE ", "# HELP ")), line
+        else:
+            name_part, val = line.rsplit(" ", 1)
+            float(val)                     # every sample value parses
+    assert "repro_serve_step_latency_seconds" in prom
+    tm = res_on["telemetry"]
+    assert tm["ring"]["steps"] == res_on["steps"], (
+        "metrics ring missed decode steps")
+
+    rows = [
+        (f"serve_obs_off,{1e6 / max(s_off['tok_per_s'], 1e-9):.1f},"
+         f"{s_off['tok_per_s']:.1f}"),
+        (f"serve_obs_on,{1e6 / max(s_on['tok_per_s'], 1e-9):.1f},"
+         f"{s_on['tok_per_s']:.1f}"),
+        f"serve_obs_on_vs_off,{ratio:.2f},gate>={OBS_GATE}",
+        (f"serve_obs_spans,{tm['spans']},"
+         f"events={tm['events']}_ring={tm['ring']['kept']}"
+         f"of{tm['ring']['steps']}"),
+    ]
+    sec = {
+        "level": OBS_LEVEL, "gate": OBS_GATE,
+        "bit_identical": True,             # asserted above
+        "off": {"tok_per_s": s_off["tok_per_s"],
+                "latency_p99_s": s_off["latency_p99_s"]},
+        "on": {"tok_per_s": s_on["tok_per_s"],
+               "latency_p99_s": s_on["latency_p99_s"],
+               "spans": tm["spans"],
+               "spans_dropped": tm["spans_dropped"],
+               "events": tm["events"],
+               "ring": tm["ring"],
+               "step_latency_s": tm["step_latency_s"],
+               "queue_delay_s": tm["queue_delay_s"],
+               "ttft_s": tm["ttft_s"]},
+        "on_vs_off_tok_s": ratio,
+        "trace_events": len(evs),
+        "prometheus_lines": len(prom.splitlines()),
+    }
+    return rows, sec
+
+
 def _scan_dtree(engine: Engine):
     """Train a DecisionTree on the engine's OWN measured slot-step counters
     for the scan-bearing region (rwkv6's time-mix / the mamba block),
@@ -954,7 +1048,8 @@ def _best_of(engine: Engine, base: list[Request], n: int = 2):
 def run(smoke: bool = False, overcommit_only: bool = False,
         prefix_only: bool = False, tp_only: bool = False,
         chaos: bool = False, chaos_only: bool = False,
-        recurrent_only: bool = False, family: str = "mamba2"):
+        recurrent_only: bool = False, family: str = "mamba2",
+        obs_only: bool = False):
     global json_summary
     # smoke keeps the same 8-request trace (the CI guard gates on ratios
     # that need the full concurrency of the mixed-length trace) but takes
@@ -980,6 +1075,20 @@ def run(smoke: bool = False, overcommit_only: bool = False,
     model = build(cfg)
     params = jax.tree.map(lambda a: a * PARAM_SCALE,
                           model.init(jax.random.PRNGKey(0)))
+    if obs_only:
+        # the focused telemetry-overhead gate (CI's obs-smoke job):
+        # telemetry-on vs off bit-identity + tok/s ratio + exporter
+        # validity, nothing else
+        ob_rows, ob_sec = _obs_section(model, params, cfg.vocab_size,
+                                       reps=2 if smoke else 3)
+        yield from ob_rows
+        json_summary = {
+            "arch": ARCH, "smoke": smoke, "obs_only": True,
+            "observability": ob_sec,
+            "ratios": {"telemetry_on_vs_off_tok_s":
+                       ob_sec["on_vs_off_tok_s"]},
+        }
+        return
     if overcommit_only:
         # the focused elastic-memory gate (CI's overcommit-smoke job):
         # just the lazy-vs-full comparison, skipping every other path
@@ -1190,6 +1299,11 @@ def run(smoke: bool = False, overcommit_only: bool = False,
         ch_rows, ch_sec = _chaos_section(model, params, cfg.vocab_size)
         yield from ch_rows
 
+    # -- telemetry overhead: subsystem on (debug level) vs off
+    ob_rows, ob_sec = _obs_section(model, params, cfg.vocab_size,
+                                   reps=2 if smoke else 3)
+    yield from ob_rows
+
     # -- dual-mode recurrent serving: chunk vs fused scan (--family picks
     # -- the mixer; its own model/params, independent of the stablelm runs)
     rc_rows, rc_sec = _recurrent_section(family, reps)
@@ -1284,7 +1398,10 @@ def run(smoke: bool = False, overcommit_only: bool = False,
         "prefix": pf_sec,
         "tp": tp_sec,
         "recurrent": rc_sec,
+        "observability": ob_sec,
     }
+    json_summary["ratios"]["telemetry_on_vs_off_tok_s"] = (
+        ob_sec["on_vs_off_tok_s"])
     if "prefill_heavy" in rc_sec:
         json_summary["ratios"]["recurrent_chunk_vs_fused_prefill"] = (
             rc_sec["prefill_heavy"]["chunk_vs_fused"])
@@ -1311,6 +1428,7 @@ if __name__ == "__main__":
     ch_only = "--chaos-only" in sys.argv
     ch = "--chaos" in sys.argv
     rc_only = "--recurrent-only" in sys.argv
+    ob_only = "--obs-only" in sys.argv
     fam = (sys.argv[sys.argv.index("--family") + 1]
            if "--family" in sys.argv else "mamba2")
     if fam not in RECUR_ARCH:
@@ -1318,13 +1436,14 @@ if __name__ == "__main__":
     for row in run(smoke=smoke, overcommit_only=oc_only,
                    prefix_only=pf_only, tp_only=tp_only,
                    chaos=ch, chaos_only=ch_only,
-                   recurrent_only=rc_only, family=fam):
+                   recurrent_only=rc_only, family=fam,
+                   obs_only=ob_only):
         print(row)
     write_json()
     print(f"# wrote BENCH_serve.json (smoke={smoke} "
           f"overcommit_only={oc_only} prefix_only={pf_only} "
           f"tp_only={tp_only} chaos_only={ch_only} "
-          f"recurrent_only={rc_only} family={fam})")
+          f"recurrent_only={rc_only} family={fam} obs_only={ob_only})")
     if (smoke and not oc_only and not pf_only and not tp_only
-            and not ch_only and not rc_only):
+            and not ch_only and not rc_only and not ob_only):
         assert json_summary["paged"]["tok_per_s"] > 0, "smoke run produced 0 tok/s"

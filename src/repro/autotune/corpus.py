@@ -48,6 +48,21 @@ def bucket_rate(rate: float, levels: int = 10) -> float:
     return round(math.floor(r * levels) / levels, _ROUND) if r < 1.0 else 1.0
 
 
+def bucket_log_ms(seconds: float, steps_per_decade: int = 4) -> float:
+    """Quantize a latency (seconds) to coarse ``log10(1 + ms)`` steps.
+
+    The latency Counters channels (``step_latency_p99``,
+    ``queue_delay``) need the same treatment as the rates above: raw
+    per-window latencies would shatter dedup, and absolute milliseconds
+    would dwarf the other features.  ``log10(1 + ms)`` compresses
+    microseconds-to-minutes into roughly [0, 5] and is 0 exactly at zero
+    delay; flooring to ``steps_per_decade`` levels per decade keeps
+    windows with the same latency regime merging."""
+    ms = max(float(seconds), 0.0) * 1e3
+    v = math.log10(1.0 + ms)
+    return round(math.floor(v * steps_per_decade) / steps_per_decade, _ROUND)
+
+
 @dataclasses.dataclass
 class CorpusEntry:
     """One deduplicated observation (``n`` raw observations merged; the

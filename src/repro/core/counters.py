@@ -97,19 +97,31 @@ class Counters:
                                     # over the tap window, so the decider
                                     # can learn degradation responses from
                                     # the corpus like any other knob
+    step_latency_p99: float = 0.0   # serve-side channel (not from HLO):
+                                    # windowed p99 decode-step latency,
+                                    # quantized to coarse log10(1+ms)
+                                    # steps (corpus.bucket_log_ms) so the
+                                    # decider can learn from observed
+                                    # tail latency, not just tok/s
+    queue_delay: float = 0.0        # serve-side channel (not from HLO):
+                                    # mean admission wait over the tap
+                                    # window, same log-ms quantization
 
     def scaled(self, mult: float) -> "Counters":
         """A copy with flops/bytes terms scaled (e.g. by pool occupancy:
         the serve-time decider attributes a fixed-shape step's measured
         counters to the fraction of slots doing useful work).  Rates
-        (prefix_hit_rate, fault_rate) are occupancy-invariant and copied
-        through."""
+        (prefix_hit_rate, fault_rate) and latency channels
+        (step_latency_p99, queue_delay) are occupancy-invariant and
+        copied through."""
         return Counters(flops=self.flops * mult, bytes=self.bytes * mult,
                         collective_bytes=self.collective_bytes * mult,
                         link_bytes=self.link_bytes * mult,
                         collective_ops=self.collective_ops, ops=self.ops,
                         prefix_hit_rate=self.prefix_hit_rate,
-                        fault_rate=self.fault_rate)
+                        fault_rate=self.fault_rate,
+                        step_latency_p99=self.step_latency_p99,
+                        queue_delay=self.queue_delay)
 
     def add(self, other: "Counters", mult: float = 1.0,
             skip_bytes: bool = False):

@@ -23,6 +23,7 @@ FEATURE_NAMES = (
     "log_flops", "log_bytes", "log_collective_bytes", "log_link_bytes",
     "arithmetic_intensity", "collective_fraction", "ops",
     "prefix_hit_rate", "fault_rate",
+    "step_latency_p99", "queue_delay",
 )
 
 
@@ -42,6 +43,8 @@ def features(c) -> np.ndarray:
         ai, coll_frac, float(c.ops),
         float(getattr(c, "prefix_hit_rate", 0.0)),
         float(getattr(c, "fault_rate", 0.0)),
+        float(getattr(c, "step_latency_p99", 0.0)),
+        float(getattr(c, "queue_delay", 0.0)),
     ])
 
 

@@ -212,6 +212,27 @@ class ServeConfig:
     chaos_seed: int = 0         # FaultInjector stream seed
     chaos_sites: tuple = ()     # subset of faults.FAULT_SITES (empty =
                                 # all sites)
+    # -- telemetry (serve/telemetry.py: spans + metrics ring + exporters) ----
+    telemetry: bool = False     # build the Telemetry subsystem (request
+                                # span tracing, bounded step-metrics
+                                # ring, latency sketches).  Off = the
+                                # attribute stays None and every hot
+                                # path pays one `is not None` check —
+                                # the FaultInjector contract.  Any of
+                                # the three output paths below implies
+                                # it on.
+    trace_out: str = ""         # write the last serve()'s Chrome
+                                # trace-event JSON (Perfetto-loadable)
+                                # here at serve() exit
+    metrics_out: str = ""       # write a Prometheus text snapshot
+                                # (Engine.metrics_text()) here at
+                                # serve() exit
+    log_out: str = ""           # stream the structured JSONL event log
+                                # here ("" = bounded in-memory buffer
+                                # only)
+    log_level: str = "info"     # event-log threshold: "debug" adds
+                                # per-step/injection events, "warning"
+                                # keeps only health transitions
 
 
 def sample_rows(logits: jax.Array, key, temperature: float) -> jax.Array:
@@ -338,6 +359,19 @@ class Engine:
         self._fallback = None                       # (step, depth, tp) to
                                                     # restore on recovery
 
+        # -- telemetry (spans + metrics ring + exporters) --------------------
+        # same zero-overhead contract as the injector: None unless asked
+        # for, and every hot-path touch is one `is not None` check
+        self.telemetry = None
+        if (self.cfg.telemetry or self.cfg.trace_out or self.cfg.metrics_out
+                or self.cfg.log_out):
+            from repro.serve.telemetry import Telemetry
+            self.telemetry = Telemetry(level=self.cfg.log_level,
+                                       log_out=self.cfg.log_out)
+        self.health.telemetry = self.telemetry
+        if self.faults is not None:
+            self.faults.telemetry = self.telemetry
+
         # -- online autotuning state (measure->corpus->train->decide) --------
         self.corpus = None
         self.trainer = None
@@ -364,6 +398,10 @@ class Engine:
         """Zero the per-trace measurement-tap accumulators and stats."""
         self._tap_acc: dict = {}        # bucket -> [steps, tokens, secs,
                                         #            prefix lookups, hits]
+        self._tap_lat: dict = {}        # bucket -> LatencySketch over the
+                                        # window (feeds step_latency_p99)
+        self._tap_qd = [0.0, 0]         # window queue-delay [sum_s, n]
+                                        # over fresh admissions
         self._tap_pending = 0           # taps since the last flush
         self._tap_prefix_last = None    # (lookups, hits) at the last tap —
                                         # pool counters are monotonic, the
@@ -738,6 +776,7 @@ class Engine:
             # paths; None keeps them zero-overhead
             self._pool.faults = self.faults
             self.governor.faults = self.faults
+            self.governor.telemetry = self.telemetry
             self._build_step = self._build_paged_step
         else:
             self._pool = SlotKVPool(self._slot_cache_avals(),
@@ -1066,11 +1105,19 @@ class Engine:
         seg = "post" if st["swaps"] else "pre"
         st[seg + "_tokens"] += tokens
         st[seg + "_secs"] += dt_s
-        acc = self._tap_acc.setdefault(load_bucket(n_active),
-                                       [0, 0, 0.0, 0, 0])
+        bucket = load_bucket(n_active)
+        acc = self._tap_acc.setdefault(bucket, [0, 0, 0.0, 0, 0])
         acc[0] += 1
         acc[1] += tokens
         acc[2] += dt_s
+        # latency channel: per-bucket step-latency sketch over the window
+        # (the p99 rides into the corpus as an occupancy-invariant
+        # Counters feature, like prefix_hit_rate/fault_rate)
+        lat = self._tap_lat.get(bucket)
+        if lat is None:
+            from repro.serve.telemetry import LatencySketch
+            lat = self._tap_lat[bucket] = LatencySketch()
+        lat.add(dt_s)
         # prefix-cache hit-rate channel: per-window deltas of the pool's
         # monotonic lookup/hit counters, attributed to this step's bucket
         # so the decider can see mem_prefix_* classes EARNING their reward
@@ -1114,6 +1161,21 @@ class Engine:
         fr = self.health.fault_rate()
         if fr > 0:
             scaled = dataclasses.replace(scaled, fault_rate=bucket_rate(fr))
+        # latency channels: windowed p99 step latency for this bucket and
+        # the window's mean admission wait, both quantized to coarse
+        # log-ms steps (bucket_log_ms) so identical windows still dedup —
+        # the decider learns from observed latency, not just tok/s
+        from repro.autotune.corpus import bucket_log_ms
+        # pop: a mid-window flush (_maybe_replan's class change) must not
+        # leak the old class's latencies into the new class's window
+        lat = self._tap_lat.pop(bucket, None)
+        if lat is not None and lat.count:
+            scaled = dataclasses.replace(
+                scaled, step_latency_p99=bucket_log_ms(lat.quantile(0.99)))
+        if self._tap_qd[1]:
+            scaled = dataclasses.replace(
+                scaled,
+                queue_delay=bucket_log_ms(self._tap_qd[0] / self._tap_qd[1]))
         self.corpus.append(canonical(region), features(scaled),
                            cls, reward=toks / secs)
 
@@ -1127,12 +1189,19 @@ class Engine:
             self._append_bucket_obs(
                 bucket, acc, self._bucket_class.get(bucket, "keep_default"))
         self._tap_acc.clear()
+        self._tap_lat.clear()
+        self._tap_qd = [0.0, 0]
         self.autotune_stats["corpus_entries"] = len(self.corpus)
         new_tree = self.trainer.maybe_retrain(self.corpus, self.decider.tree)
         self.autotune_stats["retrains"] = self.trainer.retrain_count
         if new_tree is not None:
             self.decider.swap(new_tree)     # version bump busts the latch
             self.autotune_stats["swaps"] += 1
+            if self.telemetry is not None:
+                self.telemetry.event(
+                    "tree_swap", level="info",
+                    retrains=self.trainer.retrain_count,
+                    corpus_entries=len(self.corpus))
         elif self.explorer is not None and self.explorer.active:
             # no swap this round: give the explorer a mid-bucket chance at
             # the retrain cadence (bounded by its eps and budget) so new
@@ -1250,6 +1319,10 @@ class Engine:
         self.health.reset()
         self._exit_fallback()
         sched = Scheduler()
+        tel = self.telemetry
+        if tel is not None:
+            tel.start_trace()           # fresh spans/ring/sketches per trace
+            sched.tracer = tel.tracer
         for r in requests:
             sched.submit(r)
         sched.sort_queue()
@@ -1259,25 +1332,93 @@ class Engine:
         else:
             res = self._serve_slots(sched)
 
-        stats = summarize(requests)
+        # satellite bugfix: a serve shorter than retrain_interval (or one
+        # ending mid-interval) used to discard its residual accumulators —
+        # short serves never fed the corpus.  Flush whatever the trace
+        # accumulated so every serve's measurements reach the corpus.
+        if self.corpus is not None and (self._tap_acc or self._tap_pending):
+            self._tap_flush()
+
         out = {
             "requests": list(requests),
-            "stats": stats,
             "decisions": list(self.decisions_log[log_start:]),
+            **self.observability(requests),
+        }
+        out.update(res)
+        if tel is not None:
+            tel.event("serve_done", level="info",
+                      steps=res.get("steps", 0),
+                      n_done=out["stats"].get("n_done", 0),
+                      tok_per_s=round(out["stats"].get("tok_per_s", 0.0), 3))
+            if self.cfg.trace_out:
+                tel.write_trace(self.cfg.trace_out)
+            if self.cfg.metrics_out:
+                with open(self.cfg.metrics_out, "w") as f:
+                    f.write(self.metrics_text())
+        return out
+
+    # ------------------------------------------------------------------
+    # Observability: the one aggregate every reader consumes
+    # ------------------------------------------------------------------
+    def observability(self, requests: Optional[Sequence[Request]] = None
+                      ) -> dict:
+        """The per-subsystem ``summary()`` dicts behind one aggregate:
+        autotune, health, faults, memory (+ mesh on the paged pool),
+        telemetry, and — when ``requests`` is passed — the scheduler's
+        trace stats and failure rollup.  ``serve()``'s return, the
+        launcher report and ``metrics_text()`` all read from here, so a
+        new subsystem tap shows up everywhere by editing one method.
+        Keys match the historical ``serve()`` return exactly."""
+        obs: dict = {
             "autotune": self.autotune_summary(),
-            "failures": {
+            "health": self.health.summary(),
+            "faults": (self.faults.summary() if self.faults is not None
+                       else {"enabled": False, "injected_total": 0}),
+        }
+        if self._paged and self.governor is not None:
+            pool = self._pool
+            obs["memory"] = self.governor.summary()
+            # mesh placement: page bytes are per DEVICE (pages shard on
+            # kv_heads, so each device holds 1/tp of every page);
+            # page/watermark COUNTS are tp-invariant
+            obs["mesh"] = {
+                "tp": pool.tp_shards,
+                "devices": len(jax.devices()),
+                "page_bytes_per_device": pool.per_device_page_bytes(),
+                "hbm_bytes_per_device": pool.per_device_hbm_bytes(),
+                "high_water_bytes_per_device":
+                    pool.per_device_high_water_bytes(),
+            }
+        elif self._pool is not None:
+            # accounting parity with the paged pool: recurrent serves are
+            # observable (HBM footprint, occupancy high-water) like paged
+            pool = self._pool
+            obs["memory"] = {"pool": "slot",
+                             "slot_bytes": pool.slot_bytes(),
+                             "hbm_bytes": pool.hbm_bytes(),
+                             "high_water_slots": pool.high_water,
+                             "high_water_bytes": pool.high_water_bytes()}
+        if self.telemetry is not None:
+            obs["telemetry"] = self.telemetry.summary()
+        if requests is not None:
+            stats = summarize(requests)
+            obs["stats"] = stats
+            obs["failures"] = {
                 "failed": stats.get("failed", 0),
                 "expired": stats.get("expired", 0),
                 "rejected": stats.get("rejected", 0),
                 "retries": stats.get("retries", 0),
                 "errors": {r.rid: r.error for r in requests if r.error},
-            },
-            "health": self.health.summary(),
-            "faults": (self.faults.summary() if self.faults is not None
-                       else {"enabled": False, "injected_total": 0}),
-        }
-        out.update(res)
-        return out
+            }
+        return obs
+
+    def metrics_text(self) -> str:
+        """Prometheus text-exposition snapshot of :meth:`observability`
+        (plus the telemetry latency quantiles when telemetry is on) —
+        the per-engine metrics export the replica layer scrapes."""
+        from repro.serve.telemetry import prometheus_text
+        return prometheus_text(self.observability(),
+                               telemetry=self.telemetry)
 
     # ------------------------------------------------------------------
     # Graceful degradation: the safe-plan fallback
@@ -1345,6 +1486,8 @@ class Engine:
                 tok = int(out_np[slot, i])
                 if not req.out_tokens:
                     req.t_first = t
+                    if self.telemetry is not None:
+                        self.telemetry.ttft.add(max(t - req.arrival_s, 0.0))
                 req.out_tokens.append(tok)
                 c += 1
                 if len(req.out_tokens) >= req.max_new_tokens or tok == eos:
@@ -1406,11 +1549,21 @@ class Engine:
         slot_steps = 0                      # sum of stepped slots over steps
         max_depth = 0                       # deepest speculation actually run
 
+        tel = self.telemetry
         while not sched.done():
             t = now()
             # admit: every free slot takes the next arrived request (FIFO)
             while pool.n_free and sched.has_ready(t):
                 req = sched.pop_ready(t)
+                # queue-delay tap (slot admissions are always fresh —
+                # the slot pool never preempts): feeds the Counters
+                # channel and, when on, the telemetry sketch
+                qd = max(t - req.arrival_s, 0.0)
+                if self.corpus is not None:
+                    self._tap_qd[0] += qd
+                    self._tap_qd[1] += 1
+                if tel is not None:
+                    tel.on_admit(req.rid, qd, preempted=False)
                 hist = req.token_history()
                 slot = pool.alloc()
                 if self.cfg.prefill_chunk > 0 and hist.size >= 2:
@@ -1438,14 +1591,18 @@ class Engine:
                 feed = req.token_history()[:-1]
                 chunk = feed[req.prefill_pos:
                              req.prefill_pos + self.cfg.prefill_chunk]
+                tc0 = now() if tel is not None else 0.0
                 pcaches[slot] = self._slot_chunk_fn(chunk.size, pmode)(
                     self.params, pcaches[slot], jnp.asarray(chunk)[None])
+                if tel is not None:
+                    tel.tracer.add(req.rid, "PREFILL_CHUNK", tc0, now(),
+                                   tokens=int(chunk.size))
                 budget -= 1
                 req.prefill_pos += chunk.size
                 if req.prefill_pos >= feed.size:
                     pool.write(slot, pcaches.pop(slot))
                     pending[slot] = int(req.token_history()[-1])
-                    sched.start_decode(req)
+                    sched.start_decode(req, now())
                     active[slot] = True
                     prefills.pop(0)
 
@@ -1547,21 +1704,20 @@ class Engine:
             dt_step = time.perf_counter() - t_step0
             self.health.note_step(dt_step, n_slot_faults=len(faulted))
             self._tap_step(n_act, sum(consumed.values()), dt_step)
+            if tel is not None:
+                tel.on_step(steps, t_step0 - t0, dt_step,
+                            sum(consumed.values()), n_act, pool.n_free,
+                            len(faulted),
+                            self._bucket_class.get(load_bucket(n_act), ""))
+        # memory/mesh accounting now comes from Engine.observability()
+        # (the single aggregate serve() merges in)
         return {"steps": steps,
                 "spec": {"committed_tokens": committed_total,
                          "slot_steps": slot_steps,
                          "max_depth": max_depth,
                          "accepted_drafts": committed_total - slot_steps,
                          "tokens_per_step":
-                             committed_total / max(steps, 1)},
-                # accounting parity with the paged pool: recurrent serves
-                # are observable (HBM footprint, occupancy high-water) like
-                # paged ones
-                "memory": {"pool": "slot",
-                           "slot_bytes": pool.slot_bytes(),
-                           "hbm_bytes": pool.hbm_bytes(),
-                           "high_water_slots": pool.high_water,
-                           "high_water_bytes": pool.high_water_bytes()}}
+                             committed_total / max(steps, 1)}}
 
     def _serve_paged(self, sched: Scheduler) -> dict:
         """The paged-pool loop: governor-mediated admission, prompt prefill
@@ -1613,6 +1769,7 @@ class Engine:
         """
         pool = self._pool
         gov = self.governor
+        tel = self.telemetry
         B = pool.n_slots
         pending = np.zeros((B,), np.int32)
         active = np.zeros((B,), bool)
@@ -1718,11 +1875,22 @@ class Engine:
                     # prefilled fresh instead.
                     shared = shared[:-1]
                     matched = len(shared) * pool.page_size
+                fresh = req.state is RequestState.WAITING
                 slot = gov.admit(hist.size, total, shared_pages=shared)
                 if slot is None:            # head-of-line waits for memory
                     return
                 sched.pop_ready(t)
                 sched.bind_prefill(req, slot, now())
+                # queue-delay tap: admission wait of fresh arrivals (a
+                # PREEMPTED re-entry's wait is requeue_wait_s, tracked
+                # separately) feeds the Counters channel and, when on,
+                # the telemetry sketch
+                if fresh and self.corpus is not None:
+                    self._tap_qd[0] += max(t - req.arrival_s, 0.0)
+                    self._tap_qd[1] += 1
+                if tel is not None:
+                    tel.on_admit(req.rid, max(t - req.arrival_s, 0.0),
+                                 preempted=not fresh)
                 if matched:
                     pool.advance(slot, matched)  # rows adopted, not written
                     pool.prefix_hit_requests += 1
@@ -1732,7 +1900,7 @@ class Engine:
                 if hist.size - 1 <= matched:     # nothing left to prefill
                     pending[slot] = int(hist[-1])
                     pool.register_prefix(slot, hist)
-                    sched.start_decode(req)
+                    sched.start_decode(req, now())
                     active[slot] = True
                     bt_dev["dirty"] = True
                 else:
@@ -1765,11 +1933,15 @@ class Engine:
                 true_c = chunk.size
                 if true_c < C:
                     chunk = np.pad(chunk, (0, C - true_c))
+                tc0 = now() if tel is not None else 0.0
                 pool.pages = self._chunk_fn()(
                     self._step_params, pool.pages,
                     jnp.asarray(chunk[None]),
                     jnp.asarray(pool.block_tables[slot]),
                     jnp.asarray(req.prefill_pos, jnp.int32))
+                if tel is not None:
+                    tel.tracer.add(req.rid, "PREFILL_CHUNK", tc0, now(),
+                                   tokens=int(true_c))
                 budget -= 1
                 if (self.faults is not None
                         and self.faults.fire("prefill.nan")):
@@ -1795,7 +1967,7 @@ class Engine:
                     # the prompt's full pages are now written: publish them
                     # so concurrent same-prefix arrivals hit immediately
                     pool.register_prefix(slot, req.token_history())
-                    sched.start_decode(req)
+                    sched.start_decode(req, now())
                     active[slot] = True
                     bt_dev["dirty"] = True
                     prefills.pop(0)
@@ -1839,9 +2011,12 @@ class Engine:
                     # committed, pending untouched) and neither grows nor
                     # evicts anyone while it waits
                     req.backoff -= 1
+                    if (req.backoff == 0 and tel is not None):
+                        tel.tracer.end(req.rid, "RETRY_BACKOFF", now())
                     stalled.append(slot)
                     continue
                 cap = req.prompt.size - 1 + req.max_new_tokens
+                cow0_slot = pool.cow_copies if tel is not None else 0
                 # besides headroom, this step's K/V writes must land in
                 # *private* pages: cow_for_write copies any still-shared
                 # page in the write range first (copy-on-write), and a
@@ -1861,6 +2036,10 @@ class Engine:
                         stalled.append(slot)
                         break
                     preempt_victim(victim)
+                if tel is not None and pool.cow_copies > cow0_slot:
+                    # shared pages privatised for this slot's write range
+                    tel.tracer.instant(req.rid, "COW", now(),
+                                       copies=pool.cow_copies - cow0_slot)
             stalled = [s for s in stalled if s in sched.active]
             if gov.grown_pages != grown0 or pool.cow_copies != cow0:
                 # growth and CoW edit block-table rows in place — the
@@ -1949,6 +2128,9 @@ class Engine:
                     else:
                         req.backoff = self.health.policy.backoff(
                             req.fail_streak)
+                        if tel is not None:
+                            tel.tracer.begin(req.rid, "RETRY_BACKOFF",
+                                             now(), steps=req.backoff)
                     continue
                 req.fail_streak = 0
                 len0 = int(pool.lengths[slot])
@@ -1977,6 +2159,11 @@ class Engine:
             else:
                 self._exit_fallback()
             self._tap_step(n_act, sum(consumed.values()), dt_step)
+            if tel is not None:
+                tel.on_step(steps, t_step0 - t0, dt_step,
+                            sum(consumed.values()), n_act,
+                            pool.allocator.n_free, len(faulted),
+                            self._bucket_class.get(load_bucket(n_act), ""))
         except BaseException as e:
             # engine-internal error mid-serve: the failure domain is the
             # whole trace, but the POOL must outlive it — release every
@@ -1998,6 +2185,8 @@ class Engine:
         # stranded outside the prefix index (every slot released)
         pool.allocator.check_invariants()
         leaked = pool.leaked_pages()
+        # memory/mesh accounting now comes from Engine.observability()
+        # (the single aggregate serve() merges in)
         return {"steps": steps,
                 "page_leaks": leaked,
                 "spec": {"committed_tokens": committed_total,
@@ -2008,16 +2197,4 @@ class Engine:
                          "accepted_drafts":
                              committed_total - slot_steps,
                          "tokens_per_step":
-                             committed_total / max(steps, 1)},
-                "memory": gov.summary(),
-                # mesh placement at trace end: page bytes are per DEVICE
-                # (pages shard on kv_heads, so each device holds 1/tp of
-                # every page); page/watermark COUNTS are tp-invariant
-                "mesh": {
-                    "tp": pool.tp_shards,
-                    "devices": len(jax.devices()),
-                    "page_bytes_per_device": pool.per_device_page_bytes(),
-                    "hbm_bytes_per_device": pool.per_device_hbm_bytes(),
-                    "high_water_bytes_per_device":
-                        pool.per_device_high_water_bytes(),
-                }}
+                             committed_total / max(steps, 1)}}

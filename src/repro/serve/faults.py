@@ -76,6 +76,11 @@ class FaultInjector:
         self._rngs = {s: random.Random(f"{seed}:{s}") for s in wanted}
         self.draws = {s: 0 for s in wanted}
         self.fired = {s: 0 for s in wanted}
+        # optional Telemetry (serve/telemetry.py), threaded in by the
+        # engine; injections emit debug-level events.  Telemetry never
+        # touches the per-site RNG streams, so traces with and without
+        # it observe the identical fault sequence.
+        self.telemetry = None
 
     @property
     def enabled(self) -> bool:
@@ -91,6 +96,9 @@ class FaultInjector:
         hit = self._rngs[site].random() < self.rate
         if hit:
             self.fired[site] += 1
+            if self.telemetry is not None:
+                self.telemetry.event("fault_injected", level="debug",
+                                     site=site, n=self.fired[site])
         return hit
 
     @property

@@ -78,6 +78,9 @@ class HealthMonitor:
             "fallbacks": 0,  # safe-plan activations (engine tap)
             "recoveries": 0,  # returns to HEALTHY
         }
+        # optional Telemetry (serve/telemetry.py), threaded in by the
+        # engine; ladder transitions emit warning-level events through it
+        self.telemetry = None
 
     def reset(self) -> None:
         """Fresh trace: clear the window and ladder, keep the policy."""
@@ -103,6 +106,7 @@ class HealthMonitor:
         self._window.append(1 if faulted else 0)
         self._clean_run = 0 if faulted else self._clean_run + 1
 
+        prev = self.state
         w = sum(self._window)
         if self.state is HealthState.HEALTHY and w >= p.degrade_after:
             self.state = HealthState.DEGRADED
@@ -118,6 +122,11 @@ class HealthMonitor:
             self._clean_run = 0
             if self.state is HealthState.HEALTHY:
                 self.taps["recoveries"] += 1
+        if self.state is not prev and self.telemetry is not None:
+            self.telemetry.event(
+                "health_transition", level="warning",
+                state=self.state.value, prev=prev.value,
+                fault_rate=round(self.fault_rate(), 4))
 
     # -- signals -----------------------------------------------------------
 

@@ -133,6 +133,13 @@ class Scheduler:
         self.finished: list[Request] = []
         self.failed: list[Request] = []           # terminal FAILED
         self.shed: list[Request] = []             # terminal EXPIRED/REJECTED
+        # optional telemetry SpanTracer (serve/telemetry.py), threaded in
+        # by the engine per serve; None = zero-overhead production path.
+        # Lifecycle transitions below emit the request-timeline spans
+        # (QUEUED/PREFILL/DECODE/PREEMPTED + terminal markers) — the
+        # engine adds the intra-phase ones (PREFILL_CHUNK, RETRY_BACKOFF,
+        # COW).
+        self.tracer = None
 
     def submit(self, req: Request) -> None:
         if req.state is not RequestState.WAITING:
@@ -180,8 +187,15 @@ class Scheduler:
         req.slot = slot
         req.t_admit = now_s
         self.prefilling[slot] = req
+        if self.tracer is not None:
+            # a PREEMPTED re-entry closes its eviction span; a fresh
+            # admission records its whole wait as one complete QUEUED
+            # span — either way the timeline stays gap-free up to now_s
+            if not self.tracer.end(req.rid, "PREEMPTED", now_s):
+                self.tracer.add(req.rid, "QUEUED", req.arrival_s, now_s)
+            self.tracer.begin(req.rid, "PREFILL", now_s, slot=slot)
 
-    def start_decode(self, req: Request) -> None:
+    def start_decode(self, req: Request, now_s: float = 0.0) -> None:
         """Prompt fully prefilled: the request joins the decode batch."""
         if self.prefilling.get(req.slot) is not req:
             raise ValueError(f"request {req.rid} not prefilling on "
@@ -189,12 +203,15 @@ class Scheduler:
         del self.prefilling[req.slot]
         req.state = RequestState.DECODE
         self.active[req.slot] = req
+        if self.tracer is not None:
+            self.tracer.end(req.rid, "PREFILL", now_s)
+            self.tracer.begin(req.rid, "DECODE", now_s, slot=req.slot)
 
     def bind(self, req: Request, slot: int, now_s: float) -> None:
         """One-shot admission (slot path: the whole prompt prefills at
         once): bind_prefill + start_decode."""
         self.bind_prefill(req, slot, now_s)
-        self.start_decode(req)
+        self.start_decode(req, now_s)
 
     # -- preemption ----------------------------------------------------------
     def preempt(self, req: Request, now_s: float) -> None:
@@ -210,6 +227,10 @@ class Scheduler:
         req.n_preempts += 1
         req.t_preempt = now_s
         self.preempted.append(req)
+        if self.tracer is not None:
+            self.tracer.end_all(req.rid, now_s)     # DECODE (+ children)
+            self.tracer.begin(req.rid, "PREEMPTED", now_s,
+                              n_preempts=req.n_preempts)
 
     # -- failure domains -----------------------------------------------------
     def fail(self, req: Request, now_s: float, reason: str = "") -> None:
@@ -229,6 +250,9 @@ class Scheduler:
         req.error = reason
         req.t_done = now_s
         self.failed.append(req)
+        if self.tracer is not None:
+            self.tracer.end_all(req.rid, now_s)
+            self.tracer.instant(req.rid, "FAILED", now_s, reason=reason)
 
     def shed_waiting(self, now_s: float, max_queue: int = 0,
                      default_deadline_s: float = 0.0) -> tuple[list, list]:
@@ -263,6 +287,11 @@ class Scheduler:
             self._queue = keep
             self.shed.extend(expired)
             self.shed.extend(rejected)
+            if self.tracer is not None:
+                for req in expired + rejected:
+                    self.tracer.add(req.rid, "QUEUED", req.arrival_s, now_s)
+                    self.tracer.instant(req.rid, req.state.value.upper(),
+                                        now_s, reason=req.error)
         return expired, rejected
 
     def reject(self, req: Request, reason: str) -> None:
@@ -274,6 +303,8 @@ class Scheduler:
         req.error = reason
         req.t_done = 0.0
         self.shed.append(req)
+        if self.tracer is not None:
+            self.tracer.instant(req.rid, "REJECTED", 0.0, reason=reason)
 
     # -- completion ----------------------------------------------------------
     def complete(self, req: Request, now_s: float) -> None:
@@ -284,6 +315,10 @@ class Scheduler:
         req.state = RequestState.DONE
         req.t_done = now_s
         self.finished.append(req)
+        if self.tracer is not None:
+            self.tracer.end_all(req.rid, now_s)     # DECODE (+ children)
+            self.tracer.instant(req.rid, "DONE", now_s,
+                                tokens=len(req.out_tokens))
 
     def done(self) -> bool:
         return (not self._queue and not self.preempted and not self.active

@@ -123,6 +123,78 @@ def test_bucketed_decisions_follow_occupancy_over_a_trace():
 
 
 # ---------------------------------------------------------------------------
+# Latency-aware channels: step_latency_p99 / queue_delay as dtree features
+# ---------------------------------------------------------------------------
+
+
+def test_latency_channels_reach_the_feature_vector():
+    import dataclasses
+
+    from repro.core.dtree import FEATURE_NAMES
+    assert FEATURE_NAMES[-2:] == ("step_latency_p99", "queue_delay")
+    base = Counters(flops=8e9, bytes=2e9)
+    c = dataclasses.replace(base, step_latency_p99=0.25, queue_delay=0.5)
+    f = features(c)
+    assert len(f) == len(FEATURE_NAMES) == 11
+    assert f[-2] == 0.25 and f[-1] == 0.5
+    # occupancy scaling attributes compute, not observed latency: the
+    # telemetry channels pass through Counters.scaled unchanged
+    fs = features(c.scaled(0.25))
+    assert fs[-2] == 0.25 and fs[-1] == 0.5
+    assert fs[0] < f[0]                           # log_flops still drops
+
+
+def _latency_tree():
+    """Identical compute shape, different observed latency regime: a calm
+    pool keeps elastic lazy admission, a latency-stressed one (preemption
+    churn showing up as step-p99 spikes and queue delay) votes the
+    preemption-free mem_full candidate.  The split can ONLY come from the
+    telemetry feature channels — every other feature is constant."""
+    import dataclasses
+    base = Counters(flops=8e9, bytes=2e9)
+    X, y = [], []
+    for lat, qd, label in ((0.0, 0.0, "mem_lazy"), (0.25, 0.0, "mem_lazy"),
+                           (1.5, 1.0, "mem_full"), (2.0, 1.5, "mem_full")):
+        X.append(features(dataclasses.replace(
+            base, step_latency_p99=lat, queue_delay=qd)))
+        y.append(label)
+    return DecisionTree(max_depth=3).fit(np.stack(X), y), base
+
+
+def test_latency_features_switch_memory_policy_decision():
+    """The same occupancy, the same measured compute — only the quantized
+    step-latency p99 / queue-delay channels differ, and the decider lands
+    a different reservation policy on the plan."""
+    import dataclasses
+    tree, base = _latency_tree()
+    calm = dataclasses.replace(base, step_latency_p99=0.25)
+    stressed = dataclasses.replace(base, step_latency_p99=1.75,
+                                   queue_delay=1.25)
+    dec = PlanDecider(tree, kind="decode")
+    plan_c, d_c = dec.decide(_RC({"layer0/attn": calm}), null_plan(),
+                             load_frac=1.0)
+    plan_s, d_s = dec.decide(_RC({"layer0/attn": stressed}), null_plan(),
+                             load_frac=1.0)
+    assert dict(d_c)["layer/attn"] == "mem_lazy"
+    assert dict(d_s)["layer/attn"] == "mem_full"
+    assert plan_c.config_for("layer0/attn").reservation == "lazy"
+    assert plan_s.config_for("layer0/attn").reservation == "full"
+
+
+def test_bucket_log_ms_quantization_dedups_latency_windows():
+    """The corpus-side quantizer: windows in the same latency regime land
+    the same feature value (so observations merge), decades apart land
+    apart, and the zero-latency floor is exact."""
+    from repro.autotune.corpus import bucket_log_ms
+    assert bucket_log_ms(0.0) == 0.0
+    assert bucket_log_ms(0.010) == bucket_log_ms(0.011)   # same regime
+    assert bucket_log_ms(0.001) < bucket_log_ms(0.1) < bucket_log_ms(10.0)
+    # monotone, non-decreasing over a latency sweep
+    vals = [bucket_log_ms(s) for s in (0.0, 1e-4, 1e-3, 1e-2, 0.1, 1.0, 10.0)]
+    assert vals == sorted(vals)
+
+
+# ---------------------------------------------------------------------------
 # tp_degree: decider channel + engine-side resolution/clamping
 # ---------------------------------------------------------------------------
 
